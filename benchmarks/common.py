@@ -1,0 +1,17 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """One CSV row: ``name,us_per_call,derived``."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn: Callable, *args, repeat: int = 1) -> float:
+    t0 = time.time()
+    for _ in range(repeat):
+        fn(*args)
+    return (time.time() - t0) / repeat * 1e6

@@ -1,0 +1,62 @@
+"""Fig. 12 — end-to-end evaluation: p99 E2E tail latency and violation
+rate vs tile count, under light/medium/heavy workloads, with hard/soft
+drop policies for Tp-driven and ADS-Tile (no-drop).
+
+Validates: violation rate falls with tiles for every policy; ADS-Tile's
+tail-latency curve is *flat near the deadline bound* while Tp-driven's
+dives only with excess hardware; ADS-Tile meets the bound with fewer
+tiles at medium/heavy load.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.benchmark import make_ads_benchmark
+from repro.core.experiment import ExperimentSpec, run_experiment
+
+from .common import emit
+
+CASES = (
+    ("light", 1, 0.100, (225, 260, 300, 355)),
+    ("medium", 6, 0.090, (260, 300, 355, 400, 440)),
+    ("heavy", 9, 0.080, (300, 355, 400, 430, 500)),
+)
+
+
+def _q_for(policy: str, reps: int) -> float:
+    # quantile per the paper's two-step guideline (§V-B): conservative for
+    # light loads, relaxed under pressure (tail-composition headroom)
+    if policy.startswith("ads") or policy == "reserv":
+        return 0.95 if reps <= 1 else (0.9 if reps <= 6 else 0.8)
+    return 0.95
+
+
+def run(duration: float = 1.0, seed: int = 1) -> None:
+    wf = make_ads_benchmark()
+    crit = {c.name: c.critical for c in wf.chains}
+
+    for case, reps, ddl, tile_grid in CASES:
+        for tiles in tile_grid:
+            for policy, drop in (
+                ("tp_driven", "soft"),
+                ("tp_driven_hard", "hard"),
+                ("ads_tile", "soft"),
+            ):
+                r = run_experiment(ExperimentSpec(
+                    policy=policy, tiles=tiles, cockpit_replicas=reps,
+                    deadline_s=ddl, q=_q_for(policy, reps),
+                    duration_s=duration, seed=seed, drop_policy=drop,
+                ))
+                # split driving vs cockpit p99 like the paper
+                drv, ck = [], []
+                for ch, lats in r.chain_latencies.items():
+                    (drv if crit.get(ch.split("#")[0], ch.startswith("drv"))
+                     else ck).extend(lats)
+                p99d = float(np.percentile(drv, 99)) if drv else float("nan")
+                p99c = float(np.percentile(ck, 99)) if ck else float("nan")
+                emit(
+                    f"fig12_{case}_t{tiles}_{policy}",
+                    r.violation_rate * 1e6,
+                    f"viol={r.violation_rate:.4f};p99_drv_ms={p99d*1e3:.1f};"
+                    f"p99_ck_ms={p99c*1e3:.1f};realloc={r.realloc_frac:.4f}",
+                )

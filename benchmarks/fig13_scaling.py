@@ -1,0 +1,76 @@
+"""Fig. 13 — scaling performance.
+
+(a) max cockpit chains supported (violation ~0) per tile budget, with
+    variation enabled/disabled;
+(b) minimum tiles to meet the deadline per workload scale — the paper's
+    headline: ADS-Tile ~300 vs Tp-driven ~440 at medium (31.8% fewer);
+    at heavy, Tp-driven fails at every tested capacity.  Also reports
+    cumulative realloc waste (17-44% -> <1.2%).
+"""
+from __future__ import annotations
+
+from repro.core.experiment import ExperimentSpec, run_experiment
+
+from .common import emit
+
+TILE_GRID = (225, 260, 300, 355, 400, 430, 500)
+VIOL_OK = 0.01      # "meets the latency bound"
+
+
+def _run(policy, tiles, reps, ddl, q, duration, seed, p99_ratio=3.3):
+    return run_experiment(ExperimentSpec(
+        policy=policy, tiles=tiles, cockpit_replicas=reps, deadline_s=ddl,
+        q=q, duration_s=duration, seed=seed, p99_ratio=p99_ratio,
+    ))
+
+
+def _q_for(policy: str, reps: int) -> float:
+    if policy == "ads_tile":
+        return 0.95 if reps <= 1 else (0.9 if reps <= 6 else 0.8)
+    return 0.95
+
+
+def run(duration: float = 1.0, seed: int = 1) -> None:
+    # (a) max cockpit chains per tile budget (variation on/off)
+    for tiles in (300, 400, 500):
+        for var, p99 in (("EN", 3.3), ("DIS", 1.0)):
+            for policy in ("tp_driven", "ads_tile"):
+                best = 0
+                for reps in (1, 4, 6, 9):
+                    r = _run(policy, tiles, reps, 0.09,
+                             _q_for(policy, reps), duration, seed, p99)
+                    if r.violation_rate <= VIOL_OK:
+                        best = reps
+                emit(
+                    f"fig13a_t{tiles}_{policy}_var{var}", best * 1e6,
+                    f"max_cockpit_chains={best}",
+                )
+
+    # (b) min tiles to meet the bound per case + waste comparison
+    for case, reps, ddl in (
+        ("light", 1, 0.100), ("medium", 6, 0.090), ("heavy", 9, 0.080),
+    ):
+        mins = {}
+        waste = {}
+        for policy in ("tp_driven", "ads_tile"):
+            found = None
+            for tiles in TILE_GRID:
+                r = _run(policy, tiles, reps, ddl,
+                         _q_for(policy, reps), duration, seed)
+                if r.violation_rate <= VIOL_OK:
+                    found = tiles
+                    waste[policy] = r.realloc_frac
+                    break
+                waste.setdefault(policy, r.realloc_frac)
+            mins[policy] = found
+        tp, ad = mins["tp_driven"], mins["ads_tile"]
+        saving = (
+            f"{(1 - ad / tp) * 100:.1f}%" if tp and ad else
+            ("tp_fails_all_capacities" if ad else "both_fail")
+        )
+        emit(
+            f"fig13b_{case}", (ad or 0) * 1e6,
+            f"min_tiles_tp={tp};min_tiles_ads={ad};tile_saving={saving};"
+            f"waste_tp={waste.get('tp_driven', float('nan')):.4f};"
+            f"waste_ads={waste.get('ads_tile', float('nan')):.4f}",
+        )

@@ -1,0 +1,53 @@
+"""§II-C3 scope-note quantification: tail-composition headroom per
+chain (sum of per-task q-quantile budgets vs the Monte-Carlo E2E
+quantile) and the chunk-boundary reallocation fidelity ablation
+(§IV-D2 unpreemptable chunks)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.benchmark import make_ads_benchmark
+from repro.core.experiment import ExperimentSpec, run_experiment
+from repro.core.gha.phase1 import run_phase1
+from repro.core.hardware import simba_chip
+from repro.core.latency_model import LatencyModel, chain_tail_composition
+from repro.core.sim import SimConfig, Simulator
+from repro.core.gha import GHACompiler
+from repro.core.runtime import AdsTilePolicy
+
+from .common import emit
+
+
+def run(duration: float = 1.0, seed: int = 1) -> None:
+    wf = make_ads_benchmark()
+    model = LatencyModel.from_workflow(wf, simba_chip(400))
+    p1 = run_phase1(model, wf, q=0.95)
+    dops = {t: c for t, (c, _) in p1.shapes.items()}
+    for chain in wf.chains:
+        out = chain_tail_composition(
+            model, chain.nodes, dops, q=0.95, num_samples=20000, seed=seed
+        )
+        emit(
+            f"headroom_{chain.name}", out["headroom"] * 1e6,
+            f"headroom={out['headroom']:.3f};"
+            f"sum_q_ms={out['sum_of_quantiles_s']*1e3:.1f};"
+            f"mc_q_ms={out['mc_quantile_s']*1e3:.1f}",
+        )
+
+    # chunk-boundary reallocation fidelity (§IV-D2)
+    for flag in (False, True):
+        wf6 = make_ads_benchmark(cockpit_replicas=6, critical_deadline_s=0.09)
+        lm = LatencyModel.from_workflow(wf6, simba_chip(400))
+        sched = GHACompiler(q=0.9, num_partitions=4).compile(lm, wf6)
+        sim = Simulator(
+            wf6, lm, sched, AdsTilePolicy(),
+            SimConfig(duration_s=duration, seed=seed, n_chunks=32,
+                      drop_policy="soft", chunk_boundary_realloc=flag),
+        )
+        r = sim.run()
+        emit(
+            f"chunk_boundary_{'on' if flag else 'off'}",
+            r.realloc_frac * 1e6,
+            f"realloc={r.realloc_frac:.4f};miss={r.task_miss_rate:.4f};"
+            f"n_realloc={r.n_realloc}",
+        )

@@ -1,0 +1,55 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+the dry-run artifacts:  PYTHONPATH=src python -m benchmarks.make_tables
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n/1e9:.2f}"
+
+
+def main() -> None:
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        rows.append(json.loads(p.read_text()))
+
+    print("### §Dry-run (per-device memory, from compiled.memory_analysis())\n")
+    print("| arch | shape | mesh | status | args GB | temp GB | out GB |")
+    print("|---|---|---|---|---|---|---|")
+    for d in rows:
+        m = d.get("memory", {})
+        print(
+            f"| {d['arch']} | {d['shape']} | {d.get('mesh','-')} "
+            f"| {d['status']} "
+            f"| {fmt_bytes(m.get('argument_bytes_per_device'))} "
+            f"| {fmt_bytes(m.get('temp_bytes_per_device'))} "
+            f"| {fmt_bytes(m.get('output_bytes_per_device'))} |"
+        )
+
+    print("\n### §Roofline (three terms per cell; v5e constants)\n")
+    print("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| dominant | useful/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d.get("status") != "OK":
+            print(f"| {d['arch']} | {d['shape']} | {d.get('mesh','-')} "
+                  f"| {d['status']} | | | | | |")
+            continue
+        r = d["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""§Roofline — read the dry-run artifacts and print the roofline table:
+three terms per (arch x shape x mesh), dominant bottleneck, MODEL_FLOPS
+ratio and roofline fraction."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def run(duration: float = 0.0, seed: int = 0) -> None:
+    if not RESULTS.exists():
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    rows = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "OK":
+            emit(
+                f"roofline_{d['arch']}_{d['shape']}_{d.get('mesh','?')}",
+                0.0, d.get("status", "?"),
+            )
+            continue
+        r = d["roofline"]
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            r["bound_s"] * 1e6 if "bound_s" in r else max(
+                r["compute_s"], r["memory_s"], r["collective_s"]
+            ) * 1e6,
+            f"compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};"
+            f"collective_ms={r['collective_s']*1e3:.2f};"
+            f"dominant={r['dominant']};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+            f"roofline_fraction={r['roofline_fraction']:.4f}",
+        )

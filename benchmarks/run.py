@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper artifact (DESIGN.md §7):
+  fig6  — Cyc./Tp-driven characterization (paper Fig. 6)
+  fig11 — ablations: reservation, partitioning, their interplay (Fig. 11)
+  fig12 — E2E tail latency + violation rate vs tiles (Fig. 12)
+  fig13 — scaling: max chains / min tiles / waste (Fig. 13)
+  table2 — scheduling-decision vs resharding overhead (Table II)
+  roofline — §Roofline table from the dry-run artifacts
+
+``--only fig11`` runs a subset; ``--duration`` scales simulated seconds
+(default keeps the full harness under ~15 min on this CPU container).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import fig6_casestudy, fig11_ablation, fig12_e2e, fig13_scaling
+from . import headroom, roofline, table2_overhead
+
+SUITES = {
+    "fig6": fig6_casestudy.run,
+    "fig11": fig11_ablation.run,
+    "fig12": fig12_e2e.run,
+    "fig13": fig13_scaling.run,
+    "table2": table2_overhead.run,
+    "headroom": headroom.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument("--duration", type=float, default=1.0,
+                    help="simulated seconds per experiment")
+    ap.add_argument("--seed", type=int, default=1)
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        SUITES[name](duration=args.duration, seed=args.seed)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

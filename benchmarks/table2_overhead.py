@@ -1,0 +1,30 @@
+"""Table II — runtime overhead of Algorithm 2: ratio of a single
+scheduling-decision latency to the triggered data-resharding latency
+(mean / p50 / p99 / max), for 1-partition (glb) and multi-partition
+(pglb) configurations.  Paper: mean 7.7% (glb), 4.6% (pglb)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.experiment import ExperimentSpec, run_experiment
+
+from .common import emit
+
+
+def run(duration: float = 1.0, seed: int = 1) -> None:
+    for name, nparts in (("glb_1partition", 1), ("pglb_4partitions", 4)):
+        r = run_experiment(ExperimentSpec(
+            policy="ads_tile", tiles=400, cockpit_replicas=6,
+            deadline_s=0.09, q=0.9, num_partitions=nparts,
+            duration_s=duration, seed=seed,
+        ))
+        ratios = np.asarray(r.decision_ratios) * 100
+        if len(ratios) == 0:
+            emit(f"table2_{name}", 0.0, "no_reallocations")
+            continue
+        emit(
+            f"table2_{name}", float(np.mean(ratios)) * 1e4,
+            f"mean%={np.mean(ratios):.1f};p50%={np.percentile(ratios,50):.1f};"
+            f"p99%={np.percentile(ratios,99):.1f};max%={np.max(ratios):.1f};"
+            f"n={len(ratios)}",
+        )

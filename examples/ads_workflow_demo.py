@@ -1,0 +1,40 @@
+"""Reproduce the paper's deadline-critical scenario in one script:
+sweep schedulers over the medium-load case and print the paper-style
+comparison (Fig. 12/13 condensed).
+
+    PYTHONPATH=src python examples/ads_workflow_demo.py
+"""
+import numpy as np
+
+from repro.core.benchmark import make_ads_benchmark
+from repro.core.experiment import ExperimentSpec, run_experiment
+
+
+def main() -> None:
+    reps, ddl = 6, 0.090
+    wf = make_ads_benchmark(cockpit_replicas=reps, critical_deadline_s=ddl)
+    crit = {c.name: c.critical for c in wf.chains}
+    print(f"[demo] medium load: x{reps} cockpit chains, "
+          f"{int(ddl*1e3)} ms critical deadline, 400 tiles")
+    print(f"{'policy':12s} {'viol%':>6s} {'p99_drv':>8s} {'p99_ck':>8s} "
+          f"{'realloc%':>9s} {'n_rch':>6s}")
+    for pol, q in (
+        ("cyc", 0.95), ("cyc_s", 0.95), ("tp_driven", 0.95),
+        ("pglb", 0.95), ("ads_tile", 0.9),
+    ):
+        r = run_experiment(ExperimentSpec(
+            policy=pol, tiles=400, cockpit_replicas=reps, deadline_s=ddl,
+            q=q, duration_s=1.5, seed=1,
+        ))
+        p99d = r.group_p99(crit, True) * 1e3
+        p99c = r.group_p99(crit, False) * 1e3
+        print(f"{pol:12s} {r.violation_rate*100:6.2f} {p99d:8.1f} "
+              f"{p99c:8.1f} {r.realloc_frac*100:9.2f} {r.n_realloc:6d}")
+
+    print("\n[demo] expected signature (paper §V): Cyc misses hard; "
+          "Tp-driven burns double-digit capacity on reallocation; "
+          "ADS-Tile holds the deadline with <1.2% waste.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Compiled-artifact analysis: HLO collective-byte accounting and the
+three-term roofline model."""
+from .hlo import collective_bytes, parse_hlo_collectives
+from .roofline import RooflineTerms, roofline_from_compiled, HW
+
+__all__ = [
+    "collective_bytes",
+    "parse_hlo_collectives",
+    "RooflineTerms",
+    "roofline_from_compiled",
+    "HW",
+]

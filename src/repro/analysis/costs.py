@@ -1,0 +1,196 @@
+"""Loop-weighted HLO cost accounting.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, so for
+scan-over-layers models it under-reports FLOPs/bytes by ~num_layers
+(verified experimentally — a 10-trip scanned matmul reports 1 matmul of
+FLOPs).  This module re-derives costs from the optimized HLO text with
+per-computation execution multipliers:
+
+* **flops** — 2 * prod(result_dims) * prod(contracting_dims) for every
+  ``dot`` (elementwise flops ignored: dots dominate every cell here);
+* **hbm_bytes** — operand + result bytes of *fusion-boundary*
+  instructions (post-fusion top-level ops are the kernels; their inputs
+  and outputs are the HBM traffic), excluding no-data ops
+  (tuple/gte/parameter/bitcast/constant).
+
+Both are weighted by while-loop trip counts (see ``hlo._Module``).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Set, Tuple
+
+from .hlo import (
+    _COLLECTIVES,
+    _INSTR_RE,
+    _Module,
+    _OPERAND_RE,
+    _shape_bytes,
+)
+
+__all__ = ["weighted_costs"]
+
+_NO_DATA = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_SHAPE_ONE_RE = re.compile(r"^\s*(\w+)\[([\d,]*)\]")
+
+
+def _dims(shape_str: str) -> List[int]:
+    m = _SHAPE_ONE_RE.match(shape_str.strip())
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _result_elems(shape_str: str) -> int:
+    n = 1
+    for d in _dims(shape_str):
+        n *= d
+    return n
+
+
+def weighted_costs(hlo_text: str) -> Dict[str, float]:
+    mod = _Module(hlo_text)
+    mult = mod.multipliers()
+
+    # identify fusion-body computations (internal ops: no HBM traffic)
+    fusion_bodies: Set[str] = set()
+    for comp, lines in mod.comps.items():
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if im and im.group(3) == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", line)
+                if cm:
+                    fusion_bodies.add(cm.group(1))
+
+    flops = 0.0
+    hbm = 0.0
+    for comp, lines in mod.comps.items():
+        w = mult.get(comp, 0.0)
+        if w <= 0:
+            continue
+        internal = comp in fusion_bodies
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, rshape, op = im.group(1), im.group(2), im.group(3)
+
+            if op == "dot":
+                # contracting sizes from the lhs operand's shape
+                ops = _OPERAND_RE.findall(line[line.index("("):])
+                cdim = 1
+                dm = _DOT_DIMS_RE.search(line)
+                if dm and ops:
+                    lhs_shape = _dims(mod.shapes.get(ops[0], ""))
+                    for ax in dm.group(1).split(","):
+                        if ax and int(ax) < len(lhs_shape):
+                            cdim *= lhs_shape[int(ax)]
+                flops += 2.0 * _result_elems(rshape) * cdim * w
+            elif op == "convolution":
+                # rough: 2 * out_elems * (kernel elems) — rare here
+                flops += 2.0 * _result_elems(rshape) * w
+
+            if internal or op in _NO_DATA:
+                continue
+            # fusion-boundary HBM traffic: result + operands, but charge
+            # slice-consuming fusion inputs at slice granularity (a fused
+            # dynamic-slice reads one block per trip, not the whole
+            # array) and DUS-producing fusions at update granularity
+            if op == "fusion":
+                cm = re.search(r"calls=%?([\w.\-]+)", line)
+                b = _fusion_traffic(mod, cm.group(1) if cm else None, line, rshape)
+            else:
+                b = _shape_bytes(rshape)
+                for ref in _operand_refs(line):
+                    if ref in mod.shapes:
+                        b += _shape_bytes(mod.shapes[ref])
+            hbm += b * w
+
+    return {"flops": flops, "hbm_bytes": hbm}
+
+
+def _operand_refs(line: str) -> List[str]:
+    args = line[line.index("(") + 1:] if "(" in line else ""
+    depth = 1
+    body = []
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        body.append(ch)
+    return [m.group(1) for m in _OPERAND_RE.finditer("".join(body))]
+
+
+def _fusion_traffic(mod: _Module, body_comp: Optional[str], line: str,
+                    rshape: str) -> float:
+    """Input bytes with slice-awareness + output bytes with DUS-awareness."""
+    operands = [r for r in _operand_refs(line) if r in mod.shapes]
+    if body_comp is None or body_comp not in mod.comps:
+        b = _shape_bytes(rshape)
+        return b + sum(_shape_bytes(mod.shapes[r]) for r in operands)
+
+    lines = mod.comps[body_comp]
+    # map parameter index -> internal name, find slice-only params
+    param_names: Dict[int, str] = {}
+    slice_size: Dict[str, int] = {}
+    root_line = None
+    for l in lines:
+        im = _INSTR_RE.match(l)
+        if not im:
+            continue
+        if im.group(3) == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", l)
+            if pm:
+                param_names[int(pm.group(1))] = im.group(1)
+        if l.lstrip().startswith("ROOT"):
+            root_line = l
+    # consumers of each param
+    for l in lines:
+        im = _INSTR_RE.match(l)
+        if not im or im.group(3) == "parameter":
+            continue
+        refs = set(_operand_refs(l))
+        for name in param_names.values():
+            if name in refs:
+                if im.group(3) in ("dynamic-slice", "slice"):
+                    slice_size[name] = max(
+                        slice_size.get(name, 0), _shape_bytes(im.group(2))
+                    )
+                else:
+                    slice_size[name] = -1  # consumed whole somewhere
+
+    total = 0.0
+    for idx, ref in enumerate(operands):
+        pname = param_names.get(idx)
+        full = _shape_bytes(mod.shapes[ref])
+        sz = slice_size.get(pname, -1) if pname else -1
+        total += sz if sz and sz > 0 else full
+
+    # output: DUS root writes only the update slice (+ reads nothing new
+    # when aliased); otherwise the full result
+    if root_line is not None:
+        rm = _INSTR_RE.match(root_line)
+        if rm and rm.group(3) == "dynamic-update-slice":
+            refs = _operand_refs(root_line)
+            upd = 0
+            if len(refs) >= 2:
+                # update operand is the 2nd arg; internal name shape
+                shp = None
+                for l in lines:
+                    im2 = _INSTR_RE.match(l)
+                    if im2 and im2.group(1) == refs[1]:
+                        shp = im2.group(2)
+                        break
+                if shp:
+                    upd = _shape_bytes(shp)
+            total += upd if upd else _shape_bytes(rshape)
+            return total
+    total += _shape_bytes(rshape)
+    return total

@@ -1,0 +1,15 @@
+"""ADS-Tile runtime scheduler (paper §IV).
+
+The spatio-temporal isolation-sharing space is spanned by two
+mechanisms: *configurable isolation* (partition-local tile pools bound
+**where** reallocation propagates — the partitions come from GHA Phase
+II) and *elastic reservation* (ERT admission + minimum-quota control
+bound **when** tasks enter colocation).  Within that space the
+DAG-aware scheduler (Algorithm 2) shares tiles across co-active paths
+and slack along DAG edges.
+"""
+from .reservation import fit_quota
+from .scheduler import AdsTilePolicy
+from .l2p import L2PMap
+
+__all__ = ["AdsTilePolicy", "fit_quota", "L2PMap"]

@@ -1,0 +1,40 @@
+"""Elastic reservation primitives (paper §IV-B2).
+
+* **Admission control** — a task is not eligible for colocation until
+  its Earliest-Ready-Time (ERT, ``t_v``); the engine's
+  ``eligible_jobs(admitted_only=True)`` implements the filter.
+* **Quota control** — ``fit_quota`` selects the *minimum* tile quota
+  expected to finish a job before its target, leaving residual tiles
+  idle for future urgent arrivals instead of distributing all spare
+  tiles (the anti-work-conserving choice that trades a little present
+  utilisation for lower future timeout risk).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..sim.engine import Job
+
+__all__ = ["fit_quota"]
+
+
+def fit_quota(
+    job: Job,
+    candidates: Sequence[int],
+    target_t: float,
+    now: float,
+    tile_flops: float,
+    cap: int,
+) -> int:
+    """FitQuota (Alg. 2 line 11): smallest DoP candidate <= ``cap`` whose
+    predicted finish meets ``target_t``; if none meets it, the largest
+    candidate that fits ``cap`` (best effort); 0 if nothing fits."""
+    slack = target_t - now
+    pick = 0
+    for c in candidates:
+        if c > cap:
+            break
+        pick = c
+        if job.remaining(c, tile_flops) <= slack:
+            return c
+    return pick

@@ -1,0 +1,695 @@
+"""Tile-stream event-driven simulation engine (paper §V-A).
+
+Execution model
+---------------
+Each DNN *job* (one activation of a task) samples its workload ``W`` (F1)
+and I/O latency ``I`` (F2) from the task's latency profile.  Run
+start-to-finish at DoP ``c`` the job would take::
+
+    T(c) = W / (c * P) + I + (c - 1) * sync_s
+
+Progress is tracked as a fraction in [0, 1]; running at DoP ``c``
+advances progress at rate ``1/T(c)``.  DoP changes and preemptions are
+initiated at scheduling points; chunk boundaries (``n_chunks`` per job,
+§IV-D2 operator chunks) generate additional scheduling points for
+long-running jobs.  A reallocation stalls *the whole partition*
+(stop-migrate-restart, §IV-D1); migration volume follows the L2P
+minimal-move model (§IV-D3): ``per-tile checkpoint bytes x |c_new -
+c_old|`` per resized job.
+
+Accounting
+----------
+Per partition the engine integrates allocated-tile-seconds, split into
+*effective* (running) and *realloc waste* (allocated but stalled).
+Idle is everything else.  E2E chain latencies are measured from source
+sample time to sink completion using the unrolled instance dependency
+structure (§II-C2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..gha.schedule import Schedule
+from ..hardware import HardwareModel
+from ..latency_model import LatencyModel
+from ..workload import TaskInstance, Workflow, unroll_hyperperiod
+from .policy import Policy
+
+__all__ = ["Job", "JobState", "SimConfig", "Simulator", "SimReport"]
+
+
+class JobState(enum.Enum):
+    PENDING = 0   # waiting for data
+    READY = 1     # data available, not running
+    RUNNING = 2
+    DONE = 3
+    DROPPED = 4
+
+
+@dataclasses.dataclass(eq=False)  # identity hash: jobs live in ready sets
+class Job:
+    jid: int
+    task: str
+    cycle: int
+    idx: int
+    release: float                  # absolute source-sample time
+    is_sensor: bool
+    work_flops: float
+    io_s: float
+    sync_s: float
+    partition: int                  # -1 for sensors
+    ert: float                      # absolute earliest-ready-time (t_v)
+    sub_ddl: float                  # absolute sub-deadline
+    e2e_ddl: float                  # tightest E2E deadline through this task
+    plan_dop: int                   # offline c_v
+    deps_remaining: int = 0
+    succs: List[int] = dataclasses.field(default_factory=list)
+
+    state: JobState = JobState.PENDING
+    progress: float = 0.0
+    dop: int = 0
+    rate: float = 0.0               # progress per second (0 while stalled)
+    last_t: float = 0.0
+    gen: int = 0
+    ready_t: float = math.nan
+    start_t: float = math.nan
+    finish_t: float = math.nan
+    degraded: bool = False          # an upstream job was dropped
+    n_resizes: int = 0
+
+    def duration(self, c: int, tile_flops: float) -> float:
+        if self.is_sensor:
+            return self.io_s  # sensor latency pre-sampled into io_s
+        c = max(int(c), 1)
+        return (
+            self.work_flops / (c * tile_flops)
+            + self.io_s
+            + self.sync_s * (c - 1)
+        )
+
+    def remaining(self, c: int, tile_flops: float) -> float:
+        return (1.0 - self.progress) * self.duration(c, tile_flops)
+
+
+@dataclasses.dataclass
+class _Partition:
+    idx: int
+    capacity: int
+    running: Dict[int, int] = dataclasses.field(default_factory=dict)  # jid -> dop
+    stalled: bool = False
+    stall_end: float = 0.0
+    last_t: float = 0.0
+    busy_ts: float = 0.0           # effective tile-seconds
+    realloc_ts: float = 0.0        # stalled-but-allocated tile-seconds
+    n_realloc: int = 0
+    realloc_bytes: float = 0.0
+    decision_ratios: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def allocated(self) -> int:
+        return sum(self.running.values())
+
+    def free(self) -> int:
+        return self.capacity - self.allocated
+
+
+@dataclasses.dataclass
+class SimConfig:
+    duration_s: float = 2.0
+    seed: int = 0
+    n_chunks: int = 6
+    drop_policy: str = "hard"       # "hard": drop at E2E ddl; "soft": never
+    collect_latencies: bool = True
+    #: §IV-D2 fidelity: chunks are unpreemptable, so a reallocation must
+    #: wait for the longest in-flight chunk before migration starts.
+    #: Off by default (continuous-progress approximation).
+    chunk_boundary_realloc: bool = False
+
+
+@dataclasses.dataclass
+class SimReport:
+    duration_s: float
+    total_tiles: int
+    # capacity decomposition (fractions of total processing power)
+    effective_frac: float
+    realloc_frac: float
+    idle_frac: float
+    dropped_work_frac: float
+    # events
+    n_realloc: int
+    realloc_bytes: float
+    n_jobs: int
+    n_dropped: int
+    task_miss_rate: float
+    # per-chain
+    chain_count: Dict[str, int]
+    chain_violations: Dict[str, int]
+    chain_p99_s: Dict[str, float]
+    chain_latencies: Dict[str, List[float]]
+    decision_ratios: List[float]
+
+    @property
+    def violation_rate(self) -> float:
+        tot = sum(self.chain_count.values())
+        return sum(self.chain_violations.values()) / tot if tot else 0.0
+
+    def group_p99(self, critical: Dict[str, bool], want_critical: bool) -> float:
+        lats: List[float] = []
+        for ch, ls in self.chain_latencies.items():
+            if critical.get(ch, False) == want_critical:
+                lats.extend(ls)
+        if not lats:
+            return float("nan")
+        return float(np.percentile(np.asarray(lats), 99))
+
+
+class Simulator:
+    """Event-driven Tile-stream simulator."""
+
+    def __init__(
+        self,
+        wf: Workflow,
+        model: LatencyModel,
+        schedule: Schedule,
+        policy: Policy,
+        config: Optional[SimConfig] = None,
+    ):
+        self.wf = wf
+        self.model = model
+        self.schedule = schedule
+        self.policy = policy
+        self.cfg = config or SimConfig()
+        self.hw: HardwareModel = model.hw
+        self.rng = np.random.RandomState(self.cfg.seed)
+
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, str, tuple]] = []
+        self._seq = 0
+
+        self.jobs: List[Job] = []
+        self.parts: List[_Partition] = [
+            _Partition(idx=p.index, capacity=p.capacity)
+            for p in schedule.partitions
+        ]
+        self._build_jobs()
+        # chain accounting: (chain, cycle, sink_idx) -> source release
+        self._chain_records: List[Tuple[str, int, int]] = []
+        self.chain_latencies: Dict[str, List[float]] = {
+            c.name: [] for c in wf.chains
+        }
+        self.chain_violations: Dict[str, int] = {c.name: 0 for c in wf.chains}
+        self.chain_count: Dict[str, int] = {c.name: 0 for c in wf.chains}
+        self.dropped_work_ts = 0.0
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    def _build_jobs(self) -> None:
+        wf, cfg = self.wf, self.cfg
+        thp = wf.hyper_period_s
+        n_cycles = max(1, int(math.ceil(cfg.duration_s / thp)))
+        self.n_cycles = n_cycles
+        insts = unroll_hyperperiod(wf)
+        self._insts = insts
+        index_of: Dict[Tuple[str, int], int] = {}
+
+        # tightest E2E deadline offset per task
+        ddl_off: Dict[str, float] = {}
+        for t in wf.tasks:
+            chains = wf.chain_for(t)
+            ddl_off[t] = min((c.deadline_s for c in chains), default=math.inf)
+
+        # chain sink -> source instance resolution (within one cycle)
+        inst_by_key = {(i.task, i.index): i for i in insts}
+
+        def trace_source(chain, sink_idx: int) -> Optional[int]:
+            node_i = len(chain.nodes) - 1
+            cur = inst_by_key.get((chain.nodes[node_i], sink_idx))
+            while cur is not None and node_i > 0:
+                prev = chain.nodes[node_i - 1]
+                nxt = None
+                for (pt, pj) in cur.preds:
+                    if pt == prev:
+                        nxt = inst_by_key.get((pt, pj))
+                        break
+                cur = nxt
+                node_i -= 1
+            return cur.index if cur is not None else None
+
+        self._chain_src: Dict[Tuple[str, int], Tuple[int, float]] = {}
+        for chain in wf.chains:
+            sink = chain.nodes[-1]
+            n_sink = sum(1 for i in insts if i.task == sink)
+            for k in range(n_sink):
+                src_idx = trace_source(chain, k)
+                if src_idx is None:
+                    continue
+                src_rel = next(
+                    i.release_s for i in insts
+                    if i.task == chain.nodes[0] and i.index == src_idx
+                )
+                self._chain_src[(chain.name, k)] = (src_idx, src_rel)
+
+        tile_flops = self.hw.tile_flops
+        for cycle in range(n_cycles):
+            base = cycle * thp
+            for inst in insts:
+                task = wf.tasks[inst.task]
+                prof = self.model.profiles[inst.task]
+                jid = len(self.jobs)
+                index_of[(inst.task, inst.index)] = jid
+                if task.is_sensor:
+                    lat = float(
+                        prof.sensor_latency.quantile(
+                            min(self.rng.uniform(0.001, 0.999), 0.999)
+                        )
+                    )
+                    job = Job(
+                        jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
+                        release=base + inst.release_s, is_sensor=True,
+                        work_flops=0.0, io_s=lat, sync_s=0.0, partition=-1,
+                        ert=base + inst.release_s,
+                        sub_ddl=base + inst.release_s + lat * 2,
+                        e2e_ddl=base + inst.release_s + ddl_off[inst.task],
+                        plan_dop=0,
+                    )
+                else:
+                    w = float(
+                        self.rng.lognormal(prof.work.mu, max(prof.work.sigma, 1e-12))
+                    ) if prof.work.mean > 0 else 0.0
+                    io = prof.io.base + (
+                        float(self.rng.exponential(1.0 / prof.io.rate))
+                        if prof.io.rate > 0 else 0.0
+                    )
+                    plan = self.schedule.plans[inst.task]
+                    job = Job(
+                        jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
+                        release=base + inst.release_s, is_sensor=False,
+                        work_flops=w, io_s=io, sync_s=prof.sync_per_tile_s,
+                        partition=plan.partition,
+                        ert=base + inst.release_s + plan.ert_s,
+                        sub_ddl=base + inst.release_s + plan.subdeadline_s,
+                        e2e_ddl=base + inst.release_s + ddl_off[inst.task],
+                        plan_dop=plan.dop,
+                    )
+                self.jobs.append(job)
+
+            # wire dependencies (within the same cycle)
+            for inst in insts:
+                jid = index_of[(inst.task, inst.index)]
+                job = self.jobs[jid]
+                job.deps_remaining = len(inst.preds)
+                for (pt, pj) in inst.preds:
+                    self.jobs[index_of[(pt, pj)]].succs.append(jid)
+            index_of.clear()
+
+    # ------------------------------------------------------------------
+    # event queue
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, payload: tuple) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+
+    # ------------------------------------------------------------------
+    # partition accounting
+    # ------------------------------------------------------------------
+    def _touch(self, part: _Partition) -> None:
+        dt = self.now - part.last_t
+        if dt > 0:
+            alloc = part.allocated
+            if part.stalled:
+                part.realloc_ts += alloc * dt
+            else:
+                part.busy_ts += alloc * dt
+        part.last_t = self.now
+
+    def _advance_job(self, job: Job) -> None:
+        dt = self.now - job.last_t
+        if dt > 0 and job.rate > 0:
+            job.progress = min(1.0, job.progress + dt * job.rate)
+        job.last_t = self.now
+
+    # ------------------------------------------------------------------
+    # policy verbs
+    # ------------------------------------------------------------------
+    def free_tiles(self, partition: int) -> int:
+        return self.parts[partition].free()
+
+    def eligible_jobs(
+        self, partition: int, admitted_only: bool = True
+    ) -> List[Job]:
+        """READY jobs of the partition, optionally filtered by ERT
+        admission control (§IV-B2)."""
+        out = []
+        for job in self._ready_sets[partition]:
+            if admitted_only and self.now + 1e-12 < job.ert:
+                continue
+            out.append(job)
+        return out
+
+    def start_job(self, job: Job, dop: int) -> None:
+        part = self.parts[job.partition]
+        assert job.state == JobState.READY, (job.task, job.state)
+        assert dop <= part.free(), (
+            f"{job.task}: dop {dop} > free {part.free()} in partition {part.idx}"
+        )
+        self._touch(part)
+        self._ready_sets[job.partition].discard(job)
+        job.state = JobState.RUNNING
+        job.start_t = self.now
+        job.dop = dop
+        job.last_t = self.now
+        part.running[job.jid] = dop
+        if part.stalled:
+            job.rate = 0.0  # will start when the stall ends
+        else:
+            self._set_rate(job)
+
+    def _set_rate(self, job: Job) -> None:
+        job.gen += 1
+        t_total = job.duration(job.dop, self.hw.tile_flops)
+        job.rate = 1.0 / max(t_total, 1e-9)
+        rem = (1.0 - job.progress) / job.rate
+        self._push(self.now + rem, "finish", (job.jid, job.gen))
+        # next chunk boundary
+        n = self.cfg.n_chunks
+        nxt = math.floor(job.progress * n + 1e-9) + 1
+        if nxt < n:
+            dt = (nxt / n - job.progress) / job.rate
+            self._push(self.now + dt, "chunk", (job.jid, job.gen))
+
+    def resize(
+        self,
+        partition: int,
+        new_dops: Dict[int, int],
+        starts: Optional[Dict[int, int]] = None,
+    ) -> float:
+        """Apply a reallocation in one partition: resize running jobs per
+        ``new_dops`` (jid -> dop) and start READY jobs per ``starts``.
+
+        Returns the stall duration.  The whole partition stalls while
+        checkpoints migrate (§IV-D1); migration volume uses the L2P
+        minimal-move model.  If nothing actually changes for running
+        jobs, new jobs start with zero stall.
+        """
+        part = self.parts[partition]
+        starts = starts or {}
+        changed = {
+            jid: d for jid, d in new_dops.items()
+            if jid in part.running and part.running[jid] != d
+        }
+        if not changed:
+            for jid, d in starts.items():
+                self.start_job(self.jobs[jid], d)
+            return 0.0
+
+        self._touch(part)
+        moved = 0.0
+        for jid, d in changed.items():
+            job = self.jobs[jid]
+            per_tile = self.wf.tasks[job.task].checkpoint_bytes
+            old = part.running[jid]
+            moved += per_tile * (old if d == 0 else abs(d - old))
+            job.n_resizes += 1
+        stall = self.hw.realloc_latency(moved, part.capacity)
+        if self.cfg.chunk_boundary_realloc:
+            # §IV-D2: chunks are unpreemptable — migration waits for the
+            # in-flight chunks of the *resized* jobs to drain (checkpoint
+            # positions exist only at chunk boundaries)
+            n = self.cfg.n_chunks
+            drain = 0.0
+            for jid in changed:
+                job = self.jobs[jid]
+                if job.rate <= 0 or jid not in part.running:
+                    continue
+                self._advance_job(job)
+                frac = (job.progress * n) % 1.0
+                drain = max(drain, (1.0 - frac) / (n * job.rate))
+            stall += drain
+        part.n_realloc += 1
+        part.realloc_bytes += moved
+        mig = stall - self.hw.realloc.decision_s
+        part.decision_ratios.append(
+            self.hw.realloc.decision_s / max(mig, 1e-12)
+        )
+
+        # freeze all running jobs (whole-partition stall, §IV-D1)
+        for jid in part.running:
+            job = self.jobs[jid]
+            self._advance_job(job)
+            job.rate = 0.0
+            job.gen += 1
+        # apply new dops now (tiles occupied during the stall);
+        # dop == 0 preempts back to the ready queue
+        for jid, d in changed.items():
+            job = self.jobs[jid]
+            if d == 0:
+                del part.running[jid]
+                job.dop = 0
+                job.state = JobState.READY
+                self._ready_sets[partition].add(job)
+            else:
+                part.running[jid] = d
+                job.dop = d
+        part.stalled = True
+        part.stall_end = self.now + stall
+        for jid, d in starts.items():
+            self.start_job(self.jobs[jid], d)
+        self._push(part.stall_end, "resume", (partition,))
+        return stall
+
+    def preempt(self, job: Job) -> None:
+        """Remove a running job from its tiles back to the ready queue
+        (progress preserved; used by work-conserving baselines)."""
+        part = self.parts[job.partition]
+        assert job.state == JobState.RUNNING
+        self._touch(part)
+        self._advance_job(job)
+        job.rate = 0.0
+        job.gen += 1
+        job.dop = 0
+        del part.running[job.jid]
+        job.state = JobState.READY
+        self._ready_sets[job.partition].add(job)
+
+    def terminate(self, job: Job, reason: str = "deadline") -> None:
+        """Drop a job (Cyc. budget overrun / E2E-deadline dequeue)."""
+        part = self.parts[job.partition] if job.partition >= 0 else None
+        if job.state == JobState.RUNNING and part is not None:
+            self._touch(part)
+            self._advance_job(job)
+            del part.running[job.jid]
+        elif job.state == JobState.READY:
+            self._ready_sets[job.partition].discard(job)
+        job.state = JobState.DROPPED
+        job.finish_t = self.now
+        job.rate = 0.0
+        job.gen += 1
+        # account dropped processing power (remaining work at plan DoP)
+        rem = job.remaining(max(job.plan_dop, 1), self.hw.tile_flops)
+        self.dropped_work_ts += rem * max(job.plan_dop, 1)
+        self._propagate(job)
+        self._record_dropped_sink(job)
+        self.policy.on_point(self, job.partition, self.now, "drop", job)
+
+    def arm_timer(self, partition: int, t: float, job: Optional[Job] = None) -> None:
+        self._push(t, "timer", (partition, job.jid if job else -1))
+
+    # ------------------------------------------------------------------
+    # dependency propagation
+    # ------------------------------------------------------------------
+    def _propagate(self, job: Job) -> None:
+        for sid in job.succs:
+            succ = self.jobs[sid]
+            if job.state == JobState.DROPPED or job.degraded:
+                succ.degraded = True
+            succ.deps_remaining -= 1
+            if succ.deps_remaining == 0 and succ.state == JobState.PENDING:
+                succ.state = JobState.READY
+                succ.ready_t = self.now
+                if succ.is_sensor:
+                    continue
+                self._ready_sets[succ.partition].add(succ)
+                self._push(self.now, "ready", (succ.jid,))
+                if succ.ert > self.now:
+                    self._push(succ.ert, "ert", (succ.jid,))
+
+    def _finish_job(self, job: Job) -> None:
+        part = self.parts[job.partition] if job.partition >= 0 else None
+        if part is not None and job.jid in part.running:
+            self._touch(part)
+            del part.running[job.jid]
+        job.state = JobState.DONE
+        job.progress = 1.0
+        job.finish_t = self.now
+        job.rate = 0.0
+        job.gen += 1
+        self._propagate(job)
+        # chain accounting at sinks
+        for chain in self.wf.chain_for(job.task):
+            if chain.nodes[-1] != job.task:
+                continue
+            src = self._chain_src.get((chain.name, job.idx))
+            if src is None:
+                continue
+            _, src_rel = src
+            t0 = job.cycle * self.wf.hyper_period_s + src_rel
+            lat = self.now - t0
+            self.chain_count[chain.name] += 1
+            if self.cfg.collect_latencies:
+                self.chain_latencies[chain.name].append(lat)
+            if lat > chain.deadline_s + 1e-12 or job.degraded:
+                self.chain_violations[chain.name] += 1
+
+    def _record_dropped_sink(self, job: Job) -> None:
+        for chain in self.wf.chain_for(job.task):
+            if chain.nodes[-1] != job.task:
+                continue
+            self.chain_count[chain.name] += 1
+            self.chain_violations[chain.name] += 1
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+    def run(self) -> SimReport:
+        self._ready_sets: List[set] = [set() for _ in self.parts]
+        self.policy.setup(self)
+
+        # seed events: sensor jobs are released by hardware timers
+        for job in self.jobs:
+            if job.is_sensor:
+                self._push(job.release, "sensor", (job.jid,))
+
+        end_t = self.cfg.duration_s
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t > end_t:
+                break
+            self.now = t
+
+            if kind == "sensor":
+                job = self.jobs[payload[0]]
+                job.state = JobState.RUNNING
+                job.start_t = self.now
+                self._push(self.now + job.io_s, "sensor_done", (job.jid,))
+            elif kind == "sensor_done":
+                self._finish_job(self.jobs[payload[0]])
+            elif kind == "ready":
+                job = self.jobs[payload[0]]
+                if job.state == JobState.READY:
+                    self.policy.on_point(self, job.partition, self.now, "ready", job)
+            elif kind == "ert":
+                job = self.jobs[payload[0]]
+                if job.state == JobState.READY:
+                    self.policy.on_point(self, job.partition, self.now, "ert", job)
+            elif kind == "finish":
+                jid, gen = payload
+                job = self.jobs[jid]
+                if job.gen != gen or job.state != JobState.RUNNING:
+                    continue
+                self._advance_job(job)
+                self._finish_job(job)
+                self.policy.on_point(self, job.partition, self.now, "finish", job)
+            elif kind == "chunk":
+                jid, gen = payload
+                job = self.jobs[jid]
+                if job.gen != gen or job.state != JobState.RUNNING:
+                    continue
+                self._advance_job(job)
+                # re-arm next chunk boundary
+                n = self.cfg.n_chunks
+                nxt = math.floor(job.progress * n + 1e-9) + 1
+                if nxt < n and job.rate > 0:
+                    dt = (nxt / n - job.progress) / job.rate
+                    self._push(self.now + dt, "chunk", (job.jid, job.gen))
+                self.policy.on_point(self, job.partition, self.now, "chunk", job)
+            elif kind == "resume":
+                part = self.parts[payload[0]]
+                self._touch(part)
+                part.stalled = False
+                for jid in list(part.running):
+                    job = self.jobs[jid]
+                    self._advance_job(job)
+                    self._set_rate(job)
+                self.policy.on_point(self, part.idx, self.now, "resume", None)
+            elif kind == "timer":
+                pid, jid = payload
+                job = self.jobs[jid] if jid >= 0 else None
+                if job is not None and job.state in (JobState.DONE, JobState.DROPPED):
+                    continue
+                self.policy.on_point(self, pid, self.now, "timer", job)
+
+        # drain accounting to end time
+        self.now = end_t
+        for part in self.parts:
+            self._touch(part)
+        return self._report()
+
+    # ------------------------------------------------------------------
+    def _report(self) -> SimReport:
+        total = self.hw.num_tiles * self.cfg.duration_s
+        busy = sum(p.busy_ts for p in self.parts)
+        realloc = sum(p.realloc_ts for p in self.parts)
+        dnn_jobs = [
+            j for j in self.jobs
+            if not j.is_sensor and j.release <= self.cfg.duration_s
+        ]
+        considered = [
+            j for j in dnn_jobs
+            if j.e2e_ddl <= self.cfg.duration_s  # had a chance to finish
+        ]
+        dropped = [j for j in considered if j.state == JobState.DROPPED]
+        late = [
+            j for j in considered
+            if j.state == JobState.DONE and j.finish_t > j.e2e_ddl
+        ]
+        unfinished = [
+            j for j in considered
+            if j.state in (JobState.PENDING, JobState.READY, JobState.RUNNING)
+        ]
+        n_miss = len(dropped) + len(late) + len(unfinished)
+
+        # chains whose sink never completed within the horizon count as
+        # violations (starvation must not look like success)
+        thp = self.wf.hyper_period_s
+        for chain in self.wf.chains:
+            expected = 0
+            for (cname, _k), (_si, src_rel) in self._chain_src.items():
+                if cname != chain.name:
+                    continue
+                for cycle in range(self.n_cycles):
+                    if cycle * thp + src_rel + chain.deadline_s <= self.cfg.duration_s:
+                        expected += 1
+            have = self.chain_count[chain.name]
+            if expected > have:
+                self.chain_violations[chain.name] += expected - have
+                self.chain_count[chain.name] = expected
+
+        p99 = {}
+        for ch, lats in self.chain_latencies.items():
+            p99[ch] = float(np.percentile(lats, 99)) if lats else float("nan")
+        ratios = [r for p in self.parts for r in p.decision_ratios]
+        return SimReport(
+            duration_s=self.cfg.duration_s,
+            total_tiles=self.hw.num_tiles,
+            effective_frac=busy / total,
+            realloc_frac=realloc / total,
+            idle_frac=max(0.0, 1.0 - (busy + realloc) / total),
+            dropped_work_frac=self.dropped_work_ts / total,
+            n_realloc=sum(p.n_realloc for p in self.parts),
+            realloc_bytes=sum(p.realloc_bytes for p in self.parts),
+            n_jobs=len(considered),
+            n_dropped=len(dropped),
+            task_miss_rate=n_miss / max(len(considered), 1),
+            chain_count=dict(self.chain_count),
+            chain_violations=dict(self.chain_violations),
+            chain_p99_s=p99,
+            chain_latencies=dict(self.chain_latencies),
+            decision_ratios=ratios,
+        )

@@ -1,0 +1,40 @@
+"""Runtime scheduling policy interface for Tile-stream.
+
+A :class:`Policy` is invoked at *scheduling points* — job data-ready,
+ERT reached, job finished, reallocation stall ended, chunk boundary,
+or a policy-armed timer — always in the context of one partition
+(distributed per-partition control, paper §IV-C).  Policies act through
+the simulator's verbs (``start_job`` / ``resize`` / ``terminate``);
+the engine owns all accounting (busy / idle / realloc waste).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .engine import Job, Simulator
+
+
+class Policy:
+    """Base class; concrete policies live in ``core/baselines`` and
+    ``core/runtime``."""
+
+    name: str = "base"
+
+    def setup(self, sim: "Simulator") -> None:
+        """Called once before the clock starts."""
+
+    def on_point(
+        self,
+        sim: "Simulator",
+        partition: int,
+        now: float,
+        reason: str,
+        job: Optional["Job"] = None,
+    ) -> None:
+        """Called at every scheduling point of ``partition``.
+
+        ``reason`` in {"ready", "ert", "finish", "resume", "chunk",
+        "timer", "drop"}.
+        """
+        raise NotImplementedError

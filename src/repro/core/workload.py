@@ -1,0 +1,287 @@
+"""Workload model: DAG, periodic sensors, chains, hyper-period (paper §II-C2).
+
+An ADS workflow is a DAG ``G(V, E)`` with ``V = V_sen ∪ V_dnn``.  Sensor
+tasks are activated by hardware timers at strictly periodic rates; DNN
+tasks are data-driven (ready when all predecessors complete).  Because all
+data originates from periodic sensors, dependency patterns repeat over the
+hyper-period ``T_hp = lcm{T_v}`` and the DAG unrolls into task *instances*
+with a static dependency structure (Fig. 2b-c).
+
+Times are in **seconds** throughout the core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from fractions import Fraction
+from functools import reduce
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Task",
+    "SensorTask",
+    "DnnTask",
+    "Chain",
+    "Workflow",
+    "TaskInstance",
+    "unroll_hyperperiod",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """A node of the workflow DAG."""
+
+    name: str
+    # mean arithmetic workload per job, in FLOPs (W_v's location parameter)
+    mean_flops: float = 0.0
+    # bytes checkpointed on a DoP switch (weights + live features)
+    checkpoint_bytes: float = 0.0
+    # mean fraction of aggregate DRAM bandwidth this task consumes (Fig. 10)
+    avg_bw_frac: float = 0.0
+    # peak instantaneous DRAM bandwidth demand, bytes/s (Fig. 10)
+    peak_bw: float = 0.0
+    # valid pre-compiled DoP candidates (c_v^compiled); empty = any in range
+    compiled_dops: Tuple[int, ...] = ()
+    # inclusive DoP bounds when compiled_dops is empty
+    min_dop: int = 1
+    max_dop: int = 64
+    # model family tag (for reporting only)
+    model: str = ""
+
+    @property
+    def is_sensor(self) -> bool:
+        return False
+
+    def dop_candidates(self, cap: Optional[int] = None) -> Tuple[int, ...]:
+        cands = self.compiled_dops or tuple(range(self.min_dop, self.max_dop + 1))
+        if cap is not None:
+            kept = tuple(c for c in cands if c <= cap)
+            cands = kept or (min(cands),)
+        return cands
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorTask(Task):
+    """Periodic source task, executed on a dedicated SPE (not on tiles)."""
+
+    period_s: float = 0.1  # 1/rate
+    # preprocessing latency distribution handled by the latency model;
+    # mean latency kept here for quick estimates.
+    mean_latency_s: float = 1e-3
+
+    @property
+    def is_sensor(self) -> bool:
+        return True
+
+    @property
+    def rate_hz(self) -> float:
+        return 1.0 / self.period_s
+
+
+@dataclasses.dataclass(frozen=True)
+class DnnTask(Task):
+    """Data-driven DNN inference task running on tiles."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Chain:
+    """An end-to-end chain: sensor source -> ... -> actuator/display sink."""
+
+    name: str
+    nodes: Tuple[str, ...]            # task names, topological along the path
+    deadline_s: float                 # E2E latency constraint D_e2e
+    critical: bool = False            # safety-critical (driving) vs cockpit
+
+    def __post_init__(self) -> None:
+        if len(self.nodes) < 2:
+            raise ValueError(f"chain {self.name} needs >=2 nodes")
+
+
+def _lcm(values: Iterable[int]) -> int:
+    return reduce(math.lcm, values, 1)
+
+
+@dataclasses.dataclass
+class Workflow:
+    """The workflow DAG with its E2E chains."""
+
+    tasks: Dict[str, Task]
+    edges: List[Tuple[str, str]]
+    chains: List[Chain]
+
+    def __post_init__(self) -> None:
+        for u, v in self.edges:
+            if u not in self.tasks or v not in self.tasks:
+                raise ValueError(f"edge ({u},{v}) references unknown task")
+        for ch in self.chains:
+            for n in ch.nodes:
+                if n not in self.tasks:
+                    raise ValueError(f"chain {ch.name} references unknown task {n}")
+            for a, b in zip(ch.nodes, ch.nodes[1:]):
+                if (a, b) not in set(self.edges):
+                    raise ValueError(
+                        f"chain {ch.name}: ({a},{b}) is not an edge of G"
+                    )
+        self._preds: Dict[str, List[str]] = {n: [] for n in self.tasks}
+        self._succs: Dict[str, List[str]] = {n: [] for n in self.tasks}
+        for u, v in self.edges:
+            self._preds[v].append(u)
+            self._succs[u].append(v)
+        self._check_acyclic()
+
+    # -- graph helpers ----------------------------------------------------
+    def preds(self, name: str) -> List[str]:
+        return self._preds[name]
+
+    def succs(self, name: str) -> List[str]:
+        return self._succs[name]
+
+    @property
+    def sensor_tasks(self) -> List[SensorTask]:
+        return [t for t in self.tasks.values() if isinstance(t, SensorTask)]
+
+    @property
+    def dnn_tasks(self) -> List[Task]:
+        return [t for t in self.tasks.values() if not t.is_sensor]
+
+    def topological_order(self) -> List[str]:
+        indeg = {n: len(self._preds[n]) for n in self.tasks}
+        ready = sorted(n for n, d in indeg.items() if d == 0)
+        order: List[str] = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for s in sorted(self._succs[n]):
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+            ready.sort()
+        return order
+
+    def _check_acyclic(self) -> None:
+        if len(self.topological_order()) != len(self.tasks):
+            raise ValueError("workflow graph has a cycle")
+
+    # -- timing -----------------------------------------------------------
+    @property
+    def hyper_period_s(self) -> float:
+        """T_hp = lcm of the sensor periods (exact rational arithmetic —
+        1/30 s is not integral in any fixed unit)."""
+        if not self.sensor_tasks:
+            raise ValueError("workflow has no sensor tasks")
+        fracs = [Fraction(t.period_s).limit_denominator(10**9) for t in self.sensor_tasks]
+        num = _lcm(f.numerator for f in fracs)
+        den = reduce(math.gcd, (f.denominator for f in fracs))
+        return float(Fraction(num, den))
+
+    def task_rate_hz(self, name: str) -> float:
+        """Effective activation rate of a task: max of its source sensor
+        rates along any path (a DNN task fires when all predecessors have a
+        fresh job; the slowest upstream sensor gates the rate, matching the
+        event-time alignment of §IV-C)."""
+        task = self.tasks[name]
+        if isinstance(task, SensorTask):
+            return task.rate_hz
+        preds = self._preds[name]
+        if not preds:
+            raise ValueError(f"DNN task {name} has no predecessors")
+        return min(self.task_rate_hz(p) for p in preds)
+
+    def chain_for(self, name: str) -> List[Chain]:
+        return [c for c in self.chains if name in c.nodes]
+
+    def replicate_cockpit(self, factor: int, cockpit_chain_names: Sequence[str]) -> "Workflow":
+        """Scale workload by replicating cockpit pipelines (paper §V-A,
+        nodes 11-14).  A node is replicated only if *every* chain it
+        belongs to is being replicated — shared upstream stages (image
+        backbones, sensors) stay shared across replicas."""
+        if factor <= 1:
+            return self
+        cockpit = set(cockpit_chain_names)
+        replicable = {
+            n for n in self.tasks
+            if not self.tasks[n].is_sensor
+            and (cs := self.chain_for(n))
+            and all(c.name in cockpit for c in cs)
+        }
+        tasks = dict(self.tasks)
+        edges = list(self.edges)
+        chains = list(self.chains)
+        for k in range(1, factor):
+            for cname in cockpit_chain_names:
+                chain = next(c for c in self.chains if c.name == cname)
+                mapping: Dict[str, str] = {}
+                for node in chain.nodes:
+                    if node not in replicable:
+                        mapping[node] = node  # shared stage
+                        continue
+                    new_name = f"{node}#r{k}"
+                    mapping[node] = new_name
+                    if new_name not in tasks:
+                        tasks[new_name] = dataclasses.replace(
+                            self.tasks[node], name=new_name
+                        )
+                for a, b in zip(chain.nodes, chain.nodes[1:]):
+                    e = (mapping[a], mapping[b])
+                    if e not in edges:
+                        edges.append(e)
+                chains.append(
+                    dataclasses.replace(
+                        chain,
+                        name=f"{cname}#r{k}",
+                        nodes=tuple(mapping[n] for n in chain.nodes),
+                    )
+                )
+        return Workflow(tasks=tasks, edges=edges, chains=chains)
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskInstance:
+    """One job of a task inside the hyper-period (e.g. A0, A1 in Fig. 2)."""
+
+    task: str
+    index: int                        # 0..N_v-1
+    release_s: float                  # activation offset within T_hp
+    preds: Tuple[Tuple[str, int], ...]  # (task, index) instance-level deps
+
+    @property
+    def key(self) -> Tuple[str, int]:
+        return (self.task, self.index)
+
+
+def unroll_hyperperiod(wf: Workflow) -> List[TaskInstance]:
+    """Unroll the DAG over one hyper-period (paper §II-C2).
+
+    Each task ``v`` decomposes into ``N_v = T_hp / T_v`` instances.  A DNN
+    instance depends on the *latest* instance of each predecessor released
+    at or before its own release (event-time matching, §IV-C).
+    """
+    thp = wf.hyper_period_s
+    instances: List[TaskInstance] = []
+    releases: Dict[str, List[float]] = {}
+
+    for name in wf.topological_order():
+        task = wf.tasks[name]
+        if isinstance(task, SensorTask):
+            n = int(round(thp / task.period_s))
+            releases[name] = [i * task.period_s for i in range(n)]
+        else:
+            preds = wf.preds(name)
+            # release times = those of the rate-gating (slowest) predecessor
+            gate = min(preds, key=lambda p: wf.task_rate_hz(p))
+            releases[name] = list(releases[gate])
+
+    for name in wf.topological_order():
+        task = wf.tasks[name]
+        for i, rel in enumerate(releases[name]):
+            deps: List[Tuple[str, int]] = []
+            if not task.is_sensor:
+                for p in wf.preds(name):
+                    # latest predecessor instance with release <= rel
+                    cand = [j for j, r in enumerate(releases[p]) if r <= rel + 1e-12]
+                    deps.append((p, cand[-1] if cand else 0))
+            instances.append(
+                TaskInstance(task=name, index=i, release_s=rel, preds=tuple(deps))
+            )
+    return instances

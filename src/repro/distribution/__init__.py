@@ -1,0 +1,5 @@
+"""Distribution layer: sharding rules, gradient compression, collective
+overlap helpers and elastic re-meshing."""
+from .sharding import batch_specs, cache_specs, param_specs
+
+__all__ = ["param_specs", "batch_specs", "cache_specs"]

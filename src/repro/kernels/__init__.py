@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the zoo's compute hot spots.
+
+Each kernel module provides ``pl.pallas_call`` + explicit BlockSpec VMEM
+tiling; ``ops.py`` holds the jit'd dispatch wrappers (interpret mode on
+CPU, compiled on TPU) and ``ref.py`` the pure-jnp oracles used by the
+allclose sweeps in ``tests/test_kernels.py``.
+
+Kernels:
+* ``flash_attention`` — GQA flash attention with causal + sliding-window
+  masking and logit softcap (gemma-2/3), online softmax, (heads, q-block)
+  parallel grid with an arbitrary kv-block dim carrying VMEM scratch.
+* ``ssd`` — Mamba-2 SSD intra-chunk kernel (decay-weighted quadratic +
+  chunk state summaries); the O(L) inter-chunk scan stays in jnp.
+* ``rglru`` — fused RG-LRU gates + linear recurrence.
+* ``moe_gmm`` — grouped expert matmul (E, C, D) x (E, D, F).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,162 @@
+"""GQA flash attention Pallas kernel (TPU target).
+
+Grid = (batch * kv_heads, q_blocks, kv_blocks); the kv dimension is the
+innermost ("arbitrary") axis so VMEM scratch (running max / denominator
+/ accumulator) carries across kv iterations — the canonical TPU online-
+softmax structure.  BlockSpecs tile Q/K/V into VMEM: one (group, BQ, D)
+query block and one (BK, D) key/value block live on-chip at a time.
+
+Supports causal masking, sliding windows (gemma-2/3 local layers) and
+attention-logit soft-capping.  Block shapes are MXU-aligned
+(multiples of 128 on the matmul dims when the problem allows).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,                        # output block
+    m_scr, l_scr, acc_scr,        # VMEM scratch carried over kv dim
+    *,
+    scale: float,
+    softcap: float,
+    causal: bool,
+    window: int,
+    bq: int,
+    bk: int,
+    n_kv: int,
+    kv_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                # (G, BQ, D)
+    k = k_ref[0]                                # (BK, D)
+    v = v_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                    # (G, BQ, BK)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, NEG_INF)
+
+    m_prev = m_scr[...]                          # (G, BQ)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                 # (B, Hq, Lq, D)
+    k: jax.Array,                 # (B, Hkv, Lk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    bq = min(block_q, lq)
+    bk = min(block_k, lk)
+    nq = -(-lq // bq)
+    nk = -(-lk // bk)
+    if lq % bq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, nq * bq - lq), (0, 0)))
+    if lk % bk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, nk * bk - lk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, nk * bk - lk), (0, 0)))
+
+    qg = q.reshape(b * hkv, g, nq * bq, d)
+    kg = k.reshape(b * hkv, nk * bk, d)
+    vg = v.reshape(b * hkv, nk * bk, d)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=sc, softcap=softcap, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=nk, kv_len=lk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, bq, d), lambda h, i, j: (h, 0, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, bq, d), lambda h, i, j: (h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, nq * bq, d), q.dtype),
+        scratch_shapes=[
+            _vmem((g, bq), jnp.float32),
+            _vmem((g, bq), jnp.float32),
+            _vmem((g, bq, d), jnp.float32),
+        ],
+        compiler_params=_compiler_params(interpret),
+        interpret=interpret,
+    )(qg, kg, vg)
+
+    out = out.reshape(b, hq, nq * bq, d)
+    return out[:, :, :lq]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
+    )

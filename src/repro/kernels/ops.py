@@ -1,0 +1,116 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the
+kernel body executes in Python for correctness validation; on TPU the
+same calls compile to Mosaic.  ``use_pallas()`` gates dispatch so the
+model zoo can flip between the pure-jnp path (default — it is what the
+dry-run lowers) and the kernel path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash_attention
+from .moe_gmm import moe_gmm as _moe_gmm
+from .rglru import rglru_scan as _rglru_scan
+from .ssd import ssd_intra_chunk as _ssd_intra_chunk
+
+__all__ = [
+    "on_tpu",
+    "flash_attention",
+    "ssd_chunked",
+    "rglru_scan",
+    "moe_gmm",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k", "interpret"
+))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interp,
+    )
+
+
+@partial(jax.jit, static_argnames=("chunk", "head_block", "interpret"))
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk=128, head_block=8, interpret=None):
+    """Full SSD via the intra-chunk kernel + jnp inter-chunk scan.
+
+    x (B, L, H, P), dt (B, L, H), A (H,), Bm/Cm (B, L, G=1, N).
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    interp = (not on_tpu()) if interpret is None else interpret
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, l)
+    nb = -(-l // chunk)
+    pad = nb * chunk - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = x.reshape(b, nb, chunk, h, p)
+    dtc = dt.reshape(b, nb, chunk, h)
+    Bc = Bm.reshape(b, nb, chunk, -1, n)[:, :, :, 0]     # single group
+    Cc = Cm.reshape(b, nb, chunk, -1, n)[:, :, :, 0]
+
+    hb = head_block
+    while h % hb:
+        hb -= 1
+    y_intra, contrib, chunk_decay = _ssd_intra_chunk(
+        xc, dtc, A, Bc, Cc, head_block=hb, interpret=interp
+    )
+
+    # inter-chunk scan (jnp): carry the state, emit y_inter per chunk
+    ack = jnp.cumsum(dtc.astype(jnp.float32) * A, axis=2)     # (B,nb,C,H)
+
+    def step(state, xs):
+        dec, con, Ck, ak = xs
+        y_inter = jnp.einsum(
+            "bcn,bhpn,bch->bchp", Ck.astype(jnp.float32), state, jnp.exp(ak)
+        )
+        new = state * dec[:, :, None, None] + con
+        return new, y_inter
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, y_inter = jax.lax.scan(
+        step, s0,
+        (
+            jnp.moveaxis(chunk_decay, 1, 0),
+            jnp.moveaxis(contrib, 1, 0),
+            jnp.moveaxis(Cc, 1, 0),
+            jnp.moveaxis(ack, 1, 0),
+        ),
+    )
+    y = (y_intra + jnp.moveaxis(y_inter, 0, 1)).reshape(b, nb * chunk, h, p)
+    if pad:
+        y = y[:, :l]
+    return y.astype(x.dtype), final.astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("width_block", "interpret"))
+def rglru_scan(x, r, i, lam, h0, *, width_block=128, interpret=None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    wb = min(width_block, x.shape[-1])
+    while x.shape[-1] % wb:
+        wb -= 1
+    return _rglru_scan(x, r, i, lam, h0, width_block=wb, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("block_c", "interpret"))
+def moe_gmm(x, wg, wu, wd, *, block_c=128, interpret=None):
+    interp = (not on_tpu()) if interpret is None else interpret
+    return _moe_gmm(x, wg, wu, wd, block_c=block_c, interpret=interp)

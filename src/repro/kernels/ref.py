@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "ssd_intra_chunk_ref", "rglru_scan_ref", "moe_gmm_ref"]
+
+_C = 8.0
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None):
+    """Naive full-materialisation GQA attention."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    g = hq // hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(d)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, kk, preferred_element_type=jnp.float32
+    ) * sc
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(lq)[:, None]
+    kpos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window and window > 0:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv)
+
+
+def ssd_intra_chunk_ref(x, dt, A, Bm, Cm):
+    """x (B,nb,C,H,P), dt (B,nb,C,H), A (H,), Bm/Cm (B,nb,C,N) — single
+    group.  Returns (y_intra, contrib, chunk_decay) as f32."""
+    b, nb, c, h, p = x.shape
+    ack = jnp.cumsum(dt.astype(jnp.float32) * A, axis=2)          # (B,nb,C,H)
+    seg = ack[:, :, :, None, :] - ack[:, :, None, :, :]           # (B,nb,C,C,H)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum(
+        "bncn2,bnsn2->bncs", Cm.astype(jnp.float32), Bm.astype(jnp.float32)
+    )
+    w = cb[..., None] * decay * dt[:, :, None, :, :]
+    y = jnp.einsum("bncsh,bnshp->bnchp", w, x.astype(jnp.float32))
+    d2e = jnp.exp(ack[:, :, -1:, :] - ack)
+    contrib = jnp.einsum(
+        "bnch,bncn2,bnchp->bnhpn2",
+        dt * d2e, Bm.astype(jnp.float32), x.astype(jnp.float32),
+    )
+    chunk_decay = jnp.exp(ack[:, :, -1, :])
+    return y, contrib, chunk_decay
+
+
+def rglru_scan_ref(x, r, i, lam, h0):
+    """Sequential-reference RG-LRU: x/r/i (B,L,W), lam (W,), h0 (B,W)."""
+    log_a = -_C * jax.nn.softplus(lam)[None, None, :] * jax.nn.sigmoid(
+        r.astype(jnp.float32)
+    )
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bterm = beta * jax.nn.sigmoid(i.astype(jnp.float32)) * x.astype(jnp.float32)
+
+    def step(h, xs):
+        at, bt = xs
+        h = at * h + bt
+        return h, h
+
+    hT, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bterm, 1, 0)),
+    )
+    return jnp.moveaxis(hs, 0, 1), hT
+
+
+def moe_gmm_ref(x, wg, wu, wd):
+    h = jnp.einsum("ecd,edf->ecf", x, wg, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x, wu, preferred_element_type=jnp.float32)
+    a = jax.nn.silu(h) * u
+    return jnp.einsum(
+        "ecf,efd->ecd", a.astype(wd.dtype), wd,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)

@@ -1,0 +1,106 @@
+"""Mamba-2 SSD intra-chunk Pallas kernel (TPU target).
+
+The SSD chunked algorithm splits into (a) an embarrassingly-parallel
+intra-chunk quadratic part + per-chunk state summaries, and (b) a cheap
+O(L/chunk) inter-chunk scan.  This kernel computes (a): for one
+(batch, chunk, head-block) grid cell it produces
+
+    y_intra[c]   = sum_{s<=c} C_c.B_s exp(acum_c - acum_s) dt_s x_s
+    contrib      = sum_s exp(acum_C - acum_s) dt_s B_s x_s^T   (state summary)
+    chunk_decay  = exp(acum_C)
+
+VMEM tiling: one (CHUNK, P) x-block, (CHUNK, N) B/C blocks and the
+(CHUNK, CHUNK) decay matrix per head live on-chip; matmul dims are
+MXU-aligned for chunk sizes that are multiples of 128.  The wrapper in
+``ops.py`` runs the inter-chunk scan in jnp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_intra_chunk"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+            y_ref, contrib_ref, decay_ref):
+    # blocks: x (1,1,C,HB,P) dt (1,1,C,HB) a (HB,) b/c (1,1,C,N)
+    x = x_ref[0, 0]                          # (C, HB, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)    # (C, HB)
+    A = a_ref[...]                           # (HB,)
+    Bm = b_ref[0, 0].astype(jnp.float32)     # (C, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)     # (C, N)
+    chunk = x.shape[0]
+
+    ack = jnp.cumsum(dt * A[None, :], axis=0)           # (C, HB)
+    seg = ack[:, None, :] - ack[None, :, :]             # (C, C, HB)
+    t = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_ = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where((s_ <= t)[..., None], seg, -jnp.inf)
+    decay = jnp.exp(seg)                                # (C, C, HB)
+
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                   # (C, C)
+    w = cb[..., None] * decay * dt[None, :, :]          # (C, C, HB)
+    # y[c, h, p] = sum_s w[c, s, h] * x[s, h, p]
+    y = jnp.einsum(
+        "csh,shp->chp", w, x.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    d2e = jnp.exp(ack[-1:, :] - ack)                    # (C, HB)
+    contrib = jnp.einsum(
+        "ch,cn,chp->hpn", dt * d2e, Bm, x.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    contrib_ref[0, 0] = contrib.astype(contrib_ref.dtype)
+    decay_ref[0, 0] = jnp.exp(ack[-1, :]).astype(decay_ref.dtype)
+
+
+def ssd_intra_chunk(
+    x: jax.Array,     # (B, nb, C, H, P)
+    dt: jax.Array,    # (B, nb, C, H)  softplus'd
+    A: jax.Array,     # (H,)
+    Bm: jax.Array,    # (B, nb, C, N)  (single B/C group)
+    Cm: jax.Array,    # (B, nb, C, N)
+    head_block: int = 8,
+    interpret: bool = False,
+):
+    """Returns (y_intra (B,nb,C,H,P), contrib (B,nb,H,P,N),
+    chunk_decay (B,nb,H))."""
+    b, nb, c, h, p = x.shape
+    n = Bm.shape[-1]
+    hb = min(head_block, h)
+    assert h % hb == 0
+    nh = h // hb
+
+    grid = (b, nb, nh)
+    y, contrib, decay = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, hb, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, c, hb), lambda i, j, k: (i, j, 0, k)),
+            pl.BlockSpec((hb,), lambda i, j, k: (k,)),
+            pl.BlockSpec((1, 1, c, n), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, n), lambda i, j, k: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, hb, p), lambda i, j, k: (i, j, 0, k, 0)),
+            pl.BlockSpec((1, 1, hb, p, n), lambda i, j, k: (i, j, k, 0, 0)),
+            pl.BlockSpec((1, 1, hb), lambda i, j, k: (i, j, k)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb, c, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, h, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, contrib, decay

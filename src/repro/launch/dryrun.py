@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+#   initialisation, and the multi-pod dry-run needs 512 host devices.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis.roofline import roofline_from_compiled  # noqa: E402
+from repro.configs import ARCHS, SHAPES, get_config          # noqa: E402
+from repro.distribution.sharding import (                    # noqa: E402
+    batch_specs, cache_specs, param_specs,
+)
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.models import LM, init_params                     # noqa: E402
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+__all__ = ["input_specs", "run_cell", "main"]
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def input_specs(cfg, shape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        s = shape.seq_len
+        if cfg.num_codebooks:
+            return {
+                "tokens": _sds((b, cfg.num_codebooks, s), jnp.int32),
+                "labels": _sds((b, cfg.num_codebooks, s), jnp.int32),
+            }
+        if cfg.num_patches:
+            return {
+                "tokens": _sds((b, s - cfg.num_patches), jnp.int32),
+                "labels": _sds((b, s - cfg.num_patches), jnp.int32),
+                "patch_embeds": _sds(
+                    (b, cfg.num_patches, cfg.d_model), cfg.jnp_dtype
+                ),
+            }
+        return {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        if cfg.num_codebooks:
+            return {"tokens": _sds((b, cfg.num_codebooks, s), jnp.int32)}
+        if cfg.num_patches:
+            return {
+                "tokens": _sds((b, s - cfg.num_patches), jnp.int32),
+                "patch_embeds": _sds(
+                    (b, cfg.num_patches, cfg.d_model), cfg.jnp_dtype
+                ),
+            }
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode: one new token
+    if cfg.num_codebooks:
+        return {"tokens": _sds((b, cfg.num_codebooks, 1), jnp.int32)}
+    return {"tokens": _sds((b, 1), jnp.int32)}
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _filter_spec(spec: P, mesh, shape=None) -> P:
+    """Drop axes the mesh does not have (single-pod mesh has no 'pod')
+    and axes whose size does not divide the dimension (explicit
+    ``in_shardings`` require exact divisibility: vocab 50280 cannot
+    shard 16-way, a batch of 1 cannot shard over 'data', gemma3's 4 KV
+    heads cannot split across 16 model shards)."""
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.shape.values())) if hasattr(
+        mesh.shape, "values"
+    ) else dict(mesh.shape)
+    entries = []
+    for i, e in enumerate(spec):
+        dim = None if shape is None or i >= len(shape) else shape[i]
+
+        def ok(axes) -> bool:
+            if dim is None:
+                return True
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            return dim % prod == 0
+
+        if e is None:
+            entries.append(None)
+        elif isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            while kept and not ok(kept):
+                kept = kept[1:]  # drop the outermost axis first
+            entries.append(kept if kept else None)
+        else:
+            keep = e in names and ok((e,))
+            entries.append(e if keep else None)
+    return P(*entries)
+
+
+def _shardings(mesh, spec_tree, abs_tree=None):
+    if abs_tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, _filter_spec(s, mesh)), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return jax.tree.map(
+        lambda s, a: NamedSharding(mesh, _filter_spec(s, mesh, a.shape)),
+        spec_tree, abs_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "status": "SKIP(full-attention)",
+        }
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.size
+    model = LM(cfg)
+    t0 = time.time()
+
+    key = jax.random.PRNGKey(0)
+    params_abs = _abstract(lambda: init_params(cfg, key))
+    fsdp_train = True
+    fsdp_serve = cfg.param_count() * 2 > 16 * (16e9) * 0.5  # deepseek-class
+    batch = input_specs(cfg, shape)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            p_specs = param_specs(cfg, params_abs, fsdp=fsdp_train)
+            opt_abs = _abstract(
+                lambda: adamw_init(
+                    params_abs,
+                    "bfloat16" if fsdp_serve else "float32",
+                )
+            )
+            o_specs = {
+                "m": p_specs, "v": p_specs, "step": P(),
+            }
+            b_specs = batch_specs(cfg, batch)
+            # deepseek-class models: bf16 optimizer moments (the m/v
+            # states dominate per-chip HBM at 236B; Perf iteration 3)
+            acfg = AdamWConfig(
+                state_dtype="bfloat16" if fsdp_serve else "float32"
+            )
+
+            def train_step(params, opt, batch):
+                loss, grads = jax.value_and_grad(model.loss)(params, batch)
+                new_p, new_o, gn = adamw_update(acfg, params, grads, opt)
+                return new_p, new_o, loss, gn
+
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(
+                    _shardings(mesh, p_specs, params_abs),
+                    _shardings(mesh, o_specs, opt_abs),
+                    _shardings(mesh, b_specs, batch),
+                ),
+                out_shardings=(
+                    _shardings(mesh, p_specs, params_abs),
+                    _shardings(mesh, o_specs, opt_abs),
+                    NamedSharding(mesh, P()),
+                    NamedSharding(mesh, P()),
+                ),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, batch)
+        elif shape.kind == "prefill":
+            p_specs = param_specs(cfg, params_abs, fsdp=fsdp_serve)
+            cache_abs = _abstract(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            c_specs = cache_specs(
+                cfg, cache_abs, batch_shardable=True,
+                model_size=dict(mesh.shape)["model"],
+            )
+            b_specs = batch_specs(cfg, batch)
+
+            def serve_step(params, batch, cache):
+                return model.prefill(params, batch, cache)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(
+                    _shardings(mesh, p_specs, params_abs),
+                    _shardings(mesh, b_specs, batch),
+                    _shardings(mesh, c_specs, cache_abs),
+                ),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, batch, cache_abs)
+        else:  # decode
+            p_specs = param_specs(cfg, params_abs, fsdp=fsdp_serve)
+            cache_abs = _abstract(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            shardable = shape.global_batch >= 32
+            c_specs = cache_specs(
+                cfg, cache_abs, batch_shardable=shardable,
+                model_size=dict(mesh.shape)["model"],
+            )
+            b_specs = batch_specs(cfg, batch)
+            pos = _sds((), jnp.int32)
+
+            def serve_step(params, batch, cache, pos):
+                return model.decode_step(params, batch, cache, pos)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(
+                    _shardings(mesh, p_specs, params_abs),
+                    _shardings(mesh, b_specs, batch),
+                    _shardings(mesh, c_specs, cache_abs),
+                    NamedSharding(mesh, P()),
+                ),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(params_abs, batch, cache_abs, pos)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    terms = roofline_from_compiled(arch, shape, mesh_name, chips, compiled, cfg)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "status": "OK",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes_per_device": getattr(mem, "alias_size_in_bytes", None),
+        },
+        "roofline": terms.to_dict(),
+    }
+    if verbose:
+        args_gb = (result["memory"]["argument_bytes_per_device"] or 0) / 1e9
+        tmp_gb = (result["memory"]["temp_bytes_per_device"] or 0) / 1e9
+        print(
+            f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:10s} "
+            f"args={args_gb:6.2f}GB temp={tmp_gb:6.2f}GB "
+            f"compute={terms.compute_s*1e3:8.2f}ms mem={terms.memory_s*1e3:8.2f}ms "
+            f"coll={terms.collective_s*1e3:8.2f}ms dom={terms.dominant:10s} "
+            f"lower={t_lower:5.1f}s compile={t_compile:6.1f}s",
+            flush=True,
+        )
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run sweep")
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                path = outdir / f"{tag}.json"
+                if path.exists() and not args.force:
+                    cached = json.loads(path.read_text())
+                    if not str(cached.get("status", "")).startswith("FAIL"):
+                        print(f"[dryrun] cached {tag}")
+                        continue  # retry previous failures
+                try:
+                    res = run_cell(arch, shape, multi_pod=mp)
+                except Exception as e:  # record the failure, keep sweeping
+                    res = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "multi" if mp else "single",
+                        "status": f"FAIL: {type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    failures.append(tag)
+                    print(f"[dryrun] FAIL {tag}: {e}", flush=True)
+                path.write_text(json.dumps(res, indent=2))
+    if failures:
+        print(f"[dryrun] {len(failures)} failures: {failures}")
+        raise SystemExit(1)
+    print("[dryrun] all cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh definition.
+
+Defined as FUNCTIONS (not module-level constants) so importing this
+module never touches jax device state — device count is locked on first
+jax initialisation, and only ``dryrun.py`` sets the 512-placeholder-
+device XLA flag.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single-pod mesh over ('data', 'model'); with
+    ``multi_pod=True`` the 2-pod (2, 16, 16) mesh over
+    ('pod', 'data', 'model')."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_mesh_for(num_devices: int, model_parallel: int = 1):
+    """Small helper for tests/examples on however many devices exist."""
+    data = num_devices // model_parallel
+    return jax.make_mesh(
+        (data, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

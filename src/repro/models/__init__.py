@@ -1,0 +1,20 @@
+"""Model zoo: the ten assigned architectures as composable JAX modules.
+
+One decoder-LM substrate (``common.py``) covers the dense transformers;
+family modules add Mamba-2 SSD blocks, RG-LRU hybrid blocks, MoE layers
+(token-choice GShard-style dispatch) and DeepSeek MLA attention.  All
+stacks scan over homogeneous pattern units so a 60-layer model compiles
+one unit; per-layer attention patterns (local/global alternation) ride
+through the scan as per-layer window arrays.
+"""
+from .config import ModelConfig
+from .lm import LM, init_params, train_step_fn, prefill_fn, decode_step_fn
+
+__all__ = [
+    "ModelConfig",
+    "LM",
+    "init_params",
+    "train_step_fn",
+    "prefill_fn",
+    "decode_step_fn",
+]

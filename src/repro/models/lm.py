@@ -1,0 +1,613 @@
+"""Unified decoder-LM: builds any of the ten assigned architectures from
+its :class:`ModelConfig` and exposes ``loss`` / ``prefill`` /
+``decode_step``.
+
+Layer stacks run under ``jax.lax.scan`` over *stacked* parameters so a
+60-layer model compiles a single layer body.  Per-layer attention
+patterns (local/global windows, rope bases) ride through the scan as
+per-layer arrays; training wraps the body in ``jax.checkpoint``.
+
+Modality frontends are stubs per the assignment: phi-3-vision consumes
+precomputed CLIP patch embeddings; musicgen consumes EnCodec codebook
+tokens (4 codebooks, summed embeddings, 4 output heads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attn_apply, attn_init
+from .common import (
+    BATCH_AXES,
+    ashard,
+    chunked_xent,
+    dense_init,
+    gated_mlp,
+    gated_mlp_init,
+    rms_norm,
+)
+from .config import ModelConfig
+from .mamba2 import init_ssm_state, mamba_apply, mamba_init
+from .mla import init_mla_cache, mla_apply, mla_init
+from .moe import moe_apply, moe_init
+from .rglru import init_lru_state, rglru_apply, rglru_init
+
+__all__ = ["LM", "init_params", "train_step_fn", "prefill_fn", "decode_step_fn"]
+
+
+# ---------------------------------------------------------------------------
+# per-layer pattern tables (static numpy, turned into scan xs)
+# ---------------------------------------------------------------------------
+def _layer_windows(cfg: ModelConfig) -> np.ndarray:
+    return np.asarray(
+        [0 if cfg.is_global_layer(l) else cfg.window
+         for l in range(cfg.num_layers)],
+        np.int32,
+    )
+
+
+def _layer_thetas(cfg: ModelConfig) -> np.ndarray:
+    local = cfg.rope_theta_local or cfg.rope_theta
+    return np.asarray(
+        [cfg.rope_theta if cfg.is_global_layer(l) else local
+         for l in range(cfg.num_layers)],
+        np.float32,
+    )
+
+
+def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(#lru layers, #attention layers) for the 1:k hybrid pattern."""
+    k = cfg.lru_blocks_per_attn
+    unit = k + 1
+    n_units = cfg.num_layers // unit
+    rem = cfg.num_layers - n_units * unit   # trailing lru blocks
+    n_lru = n_units * k + rem
+    n_att = n_units
+    return n_lru, n_att
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _stack_init(fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    d = cfg.d_model
+    keys = jax.random.split(key, 8)
+    # embed rows ~ N(0, 1/d): unit-variance inputs after the sqrt(d)
+    # input scaling and O(1) logits through the tied output head
+    emb_scale = d ** -0.5
+
+    if cfg.num_codebooks:
+        emb = dense_init(
+            keys[0], (cfg.num_codebooks, cfg.vocab_size, d), cfg.jnp_dtype,
+            scale=emb_scale,
+        )
+    else:
+        emb = dense_init(keys[0], (cfg.vocab_size, d), cfg.jnp_dtype, scale=emb_scale)
+    params: Dict[str, Any] = {"embed": emb, "final_norm": jnp.ones((d,), cfg.jnp_dtype)}
+
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        params["layers"] = _stack_init(
+            lambda k: {
+                "norm": jnp.ones((d,), cfg.jnp_dtype),
+                "mamba": mamba_init(k, cfg),
+            },
+            keys[1], L,
+        )
+    elif cfg.family == "hybrid":
+        n_lru, n_att = _hybrid_layout(cfg)
+        params["lru_layers"] = _stack_init(
+            lambda k: _mlp_block_init(k, cfg, core=("lru", rglru_init)),
+            keys[1], n_lru,
+        )
+        params["attn_layers"] = _stack_init(
+            lambda k: _mlp_block_init(k, cfg, core=("attn", attn_init)),
+            keys[2], n_att,
+        )
+    elif cfg.num_experts:
+        n_dense = cfg.first_dense_layers
+        if n_dense:
+            params["dense_layers"] = _stack_init(
+                lambda k: _dense_block_init(k, cfg), keys[1], n_dense
+            )
+        params["layers"] = _stack_init(
+            lambda k: _moe_block_init(k, cfg), keys[2], L - n_dense
+        )
+    else:
+        params["layers"] = _stack_init(
+            lambda k: _dense_block_init(k, cfg), keys[1], L
+        )
+    return params
+
+
+def _dense_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    attn = mla_init(k1, cfg) if cfg.mla else attn_init(k1, cfg)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.jnp_dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.jnp_dtype),
+        "attn": attn,
+        "mlp": gated_mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.jnp_dtype),
+    }
+
+
+def _moe_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    attn = mla_init(k1, cfg) if cfg.mla else attn_init(k1, cfg)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.jnp_dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.jnp_dtype),
+        "attn": attn,
+        "moe": moe_init(k2, cfg),
+    }
+
+
+def _mlp_block_init(key, cfg: ModelConfig, core):
+    name, fn = core
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.jnp_dtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.jnp_dtype),
+        name: fn(k1, cfg),
+        "mlp": gated_mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.jnp_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+
+    # -- embedding front ----------------------------------------------------
+    def embed(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        emb = params["embed"]
+        scale = math.sqrt(cfg.d_model)
+        if cfg.num_codebooks:
+            toks = batch["tokens"]                     # (B, K, S)
+            x = sum(
+                jnp.take(emb[k], toks[:, k], axis=0)
+                for k in range(cfg.num_codebooks)
+            ) * scale
+        else:
+            x = jnp.take(emb, batch["tokens"], axis=0) * scale  # (B, S, D)
+        if cfg.num_patches and "patch_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(x.dtype), x], axis=1
+            )
+        return ashard(x, BATCH_AXES, None, None)
+
+    # -- backbone ------------------------------------------------------------
+    def backbone(
+        self,
+        params,
+        x: jax.Array,
+        *,
+        positions: jax.Array,
+        cache: Optional[Dict] = None,
+        cache_pos=None,
+        train: bool = False,
+    ) -> Tuple[jax.Array, Optional[Dict]]:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            x, cache = self._ssm_stack(params, x, cache, train)
+        elif cfg.family == "hybrid":
+            x, cache = self._hybrid_stack(
+                params, x, positions, cache, cache_pos, train
+            )
+        else:
+            x, cache = self._attn_stack(
+                params, x, positions, cache, cache_pos, train
+            )
+        x = rms_norm(x, params["final_norm"])
+        return x, cache
+
+    def _maybe_ckpt(self, fn, train: bool):
+        return jax.checkpoint(fn) if (train and self.cfg.remat) else fn
+
+    # .. dense / moe transformer stack ........................................
+    def _attn_stack(self, params, x, positions, cache, cache_pos, train):
+        cfg = self.cfg
+        windows = jnp.asarray(_layer_windows(cfg))
+        thetas = jnp.asarray(_layer_thetas(cfg))
+        n_dense = cfg.first_dense_layers if cfg.num_experts else 0
+
+        def block(x, layer, window, theta, ck, cv, moe: bool):
+            # sequence-parallel residual carry: the remat-saved per-layer
+            # activations (and their grads) shard over 'model' — without
+            # this the stacked (L, B, S, D) carries alone exceed HBM
+            if x.shape[1] > 1:
+                x = ashard(x, BATCH_AXES, "model", None)
+            h = rms_norm(x, layer["ln1"])
+            if cfg.mla:
+                out, new_c = mla_apply(
+                    layer["attn"], h, cfg, positions=positions,
+                    cache=(ck, cv) if ck is not None else None,
+                    cache_pos=cache_pos,
+                )
+            else:
+                out, new_c = attn_apply(
+                    layer["attn"], h, cfg, positions=positions,
+                    window=window, theta=theta,
+                    cache=(ck, cv) if ck is not None else None,
+                    cache_pos=cache_pos,
+                )
+            x = x + out
+            h = rms_norm(x, layer["ln2"])
+            if moe:
+                x = x + moe_apply(layer["moe"], h, cfg)
+            else:
+                x = x + gated_mlp(layer["mlp"], h)
+            return x, new_c
+
+        # explicit leading dense layers (deepseek)
+        for i in range(n_dense):
+            lyr = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            ck = cv = None
+            if cache is not None:
+                ck, cv = cache["k0"][i], cache["v0"][i]
+            x, new_c = block(x, lyr, windows[i], thetas[i], ck, cv, moe=False)
+            if cache is not None:
+                cache["k0"] = cache["k0"].at[i].set(new_c[0])
+                cache["v0"] = cache["v0"].at[i].set(new_c[1])
+
+        moe = bool(cfg.num_experts)
+
+        def scan_body(x, xs):
+            layer, window, theta, ck, cv = xs
+            x, new_c = block(x, layer, window, theta, ck, cv, moe=moe)
+            if new_c is None:
+                new_c = (jnp.zeros((0,), x.dtype),) * 2
+            return x, new_c
+
+        body = self._maybe_ckpt(scan_body, train)
+        nl = cfg.num_layers - n_dense
+        if cache is not None:
+            kk, vv = ("c_kv", "k_rope") if cfg.mla else ("k", "v")
+            xs = (
+                params["layers"], windows[n_dense:], thetas[n_dense:],
+                cache[kk], cache[vv],
+            )
+            x, (new_k, new_v) = jax.lax.scan(body, x, xs)
+            cache = dict(cache)
+            cache[kk], cache[vv] = new_k, new_v
+        else:
+            def body_nc(x, xs2):
+                layer, window, theta = xs2
+                x, _ = block(x, layer, window, theta, None, None, moe=moe)
+                return x, None
+
+            body_nc = self._maybe_ckpt(body_nc, train)
+            xs_all = (params["layers"], windows[n_dense:], thetas[n_dense:])
+            x = self._grouped_scan(body_nc, x, xs_all, nl, train)
+        return x, cache
+
+    def _grouped_scan(self, body, x, xs_all, n_layers: int, train: bool):
+        """sqrt-schedule nested remat (§Perf iteration 2): an outer scan
+        over layer groups checkpoints only G ~ sqrt(L) carries instead of
+        L; layers inside a group are recomputed group-at-a-time in the
+        backward pass.  Falls back to a flat scan for short stacks or
+        non-train paths."""
+        import math as _m
+
+        # §Perf iteration 2 (REFUTED, gated off): combined with per-layer
+        # checkpointing this recomputes the forward twice in backward
+        # (+70% compute term) for <3% temp reduction — XLA hoists the
+        # carry-stack f32 convert out of the loop either way.
+        use_sqrt = getattr(self.cfg, "sqrt_remat", False)
+        g = int(_m.sqrt(n_layers)) if (train and self.cfg.remat and use_sqrt) else 0
+        if g < 2 or n_layers < 8:
+            out, _ = jax.lax.scan(body, x, xs_all)
+            return out
+        n_groups = n_layers // g
+        rem = n_layers - n_groups * g
+        head = jax.tree.map(
+            lambda a: a[:n_groups * g].reshape((n_groups, g) + a.shape[1:]),
+            xs_all,
+        )
+
+        @jax.checkpoint
+        def group_body(x, group_xs):
+            out, _ = jax.lax.scan(body, x, group_xs)
+            return out, None
+
+        x, _ = jax.lax.scan(group_body, x, head)
+        if rem:
+            tail = jax.tree.map(lambda a: a[n_groups * g:], xs_all)
+            x, _ = jax.lax.scan(body, x, tail)
+        return x
+
+    # .. mamba stack ...........................................................
+    def _ssm_stack(self, params, x, cache, train):
+        cfg = self.cfg
+
+        def body(x, xs):
+            if x.shape[1] > 1:
+                x = ashard(x, BATCH_AXES, "model", None)
+            if cache is not None:
+                layer, ssm, conv = xs
+                h = rms_norm(x, layer["norm"])
+                out, new_state = mamba_apply(
+                    layer["mamba"], h, cfg,
+                    state={"ssm": ssm, "conv": conv},
+                )
+                return x + out, (new_state["ssm"], new_state["conv"])
+            layer, = xs if isinstance(xs, tuple) else (xs,)
+            h = rms_norm(x, layer["norm"])
+            out, _ = mamba_apply(layer["mamba"], h, cfg, state=None)
+            return x + out, None
+
+        body = self._maybe_ckpt(body, train)
+        if cache is not None:
+            x, (new_ssm, new_conv) = jax.lax.scan(
+                body, x, (params["layers"], cache["ssm"], cache["conv"])
+            )
+            cache = {"ssm": new_ssm, "conv": new_conv}
+        else:
+            x, _ = jax.lax.scan(body, x, (params["layers"],))
+        return x, cache
+
+    # .. hybrid (recurrentgemma) stack ..........................................
+    def _hybrid_stack(self, params, x, positions, cache, cache_pos, train):
+        cfg = self.cfg
+        k = cfg.lru_blocks_per_attn
+        n_lru, n_att = _hybrid_layout(cfg)
+        n_units = n_att
+        tail = n_lru - n_units * k
+
+        def lru_block(x, layer, h_state, conv_state):
+            h = rms_norm(x, layer["ln1"])
+            state = (
+                {"h": h_state, "conv": conv_state} if h_state is not None else None
+            )
+            out, new_state = rglru_apply(layer["lru"], h, cfg, state)
+            x = x + out
+            x = x + gated_mlp(layer["mlp"], rms_norm(x, layer["ln2"]))
+            return x, new_state
+
+        def att_block(x, layer, ck, cv):
+            h = rms_norm(x, layer["ln1"])
+            out, new_c = attn_apply(
+                layer["attn"], h, cfg, positions=positions,
+                window=jnp.asarray(cfg.window), theta=cfg.rope_theta,
+                cache=(ck, cv) if ck is not None else None,
+                cache_pos=cache_pos,
+                ring=True,  # bounded-window ring cache (O(1) in context)
+            )
+            x = x + out
+            x = x + gated_mlp(layer["mlp"], rms_norm(x, layer["ln2"]))
+            return x, new_c
+
+        # scan over units of (k lru blocks + 1 attn block)
+        lru_params = params["lru_layers"]
+        head = jax.tree.map(lambda a: a[: n_units * k].reshape(
+            (n_units, k) + a.shape[1:]
+        ), lru_params)
+
+        def unit_body(x, xs):
+            lru_unit, att_layer, hs, cs, ck, cv = xs
+            if x.shape[1] > 1:
+                x = ashard(x, BATCH_AXES, "model", None)
+            new_h, new_conv = [], []
+            for i in range(k):
+                lyr = jax.tree.map(lambda a: a[i], lru_unit)
+                hi = hs[i] if hs is not None else None
+                ci = cs[i] if cs is not None else None
+                x, st = lru_block(x, lyr, hi, ci)
+                if st is not None:
+                    new_h.append(st["h"])
+                    new_conv.append(st["conv"])
+            x, new_c = att_block(x, att_layer, ck, cv)
+            if hs is None:
+                return x, None
+            return x, (
+                jnp.stack(new_h), jnp.stack(new_conv), new_c[0], new_c[1]
+            )
+
+        unit_body_ck = self._maybe_ckpt(unit_body, train)
+        if cache is not None:
+            hs = cache["h"][: n_units * k].reshape(
+                (n_units, k) + cache["h"].shape[1:]
+            )
+            cs = cache["conv"][: n_units * k].reshape(
+                (n_units, k) + cache["conv"].shape[1:]
+            )
+            x, ys = jax.lax.scan(
+                unit_body_ck, x,
+                (head, params["attn_layers"], hs, cs, cache["k"], cache["v"]),
+            )
+            new_h, new_conv, new_k, new_v = ys
+            cache = dict(cache)
+            cache["k"], cache["v"] = new_k, new_v
+            flat_h = new_h.reshape((n_units * k,) + new_h.shape[2:])
+            flat_c = new_conv.reshape((n_units * k,) + new_conv.shape[2:])
+        else:
+            def unit_nc(x, xs):
+                lru_unit, att_layer = xs
+                x, _ = unit_body((x), (lru_unit, att_layer, None, None, None, None))
+                return x, None
+
+            unit_nc = self._maybe_ckpt(unit_nc, train)
+            x, _ = jax.lax.scan(unit_nc, x, (head, params["attn_layers"]))
+            flat_h = flat_c = None
+
+        # trailing lru blocks (pattern remainder)
+        tail_states = []
+        for i in range(tail):
+            lyr = jax.tree.map(lambda a, i=i: a[n_units * k + i], lru_params)
+            if cache is not None:
+                hi = cache["h"][n_units * k + i]
+                ci = cache["conv"][n_units * k + i]
+                x, st = lru_block(x, lyr, hi, ci)
+                tail_states.append(st)
+            else:
+                x, _ = lru_block(x, lyr, None, None)
+        if cache is not None:
+            if tail_states:
+                flat_h = jnp.concatenate(
+                    [flat_h] + [st["h"][None] for st in tail_states]
+                )
+                flat_c = jnp.concatenate(
+                    [flat_c] + [st["conv"][None] for st in tail_states]
+                )
+            cache["h"], cache["conv"] = flat_h, flat_c
+        return x, cache
+
+    # -- heads ---------------------------------------------------------------
+    def loss(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        x = self.embed(params, batch)
+        positions = jnp.arange(x.shape[1])
+        x, _ = self.backbone(params, x, positions=positions, train=True)
+        if cfg.num_codebooks:
+            labels = batch["labels"]       # (B, K, S)
+            losses = [
+                chunked_xent(
+                    x, params["embed"][k], labels[:, k],
+                    softcap=cfg.final_logit_softcap,
+                )
+                for k in range(cfg.num_codebooks)
+            ]
+            return sum(losses) / cfg.num_codebooks
+        labels = batch["labels"]
+        if cfg.num_patches and "patch_embeds" in batch:
+            # patch positions carry no next-token loss
+            pad = jnp.full(
+                (labels.shape[0], cfg.num_patches), -1, labels.dtype
+            )
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return chunked_xent(
+            x, params["embed"], labels, softcap=cfg.final_logit_softcap
+        )
+
+    def logits_last(self, params, x_last: jax.Array) -> jax.Array:
+        """(B, D) -> (B, V) (or (B, K, V) for codebooks)."""
+        cfg = self.cfg
+        emb = params["embed"]
+        if cfg.num_codebooks:
+            out = jnp.einsum("bd,kvd->bkv", x_last, emb)
+        else:
+            out = jnp.einsum("bd,vd->bv", x_last, emb)
+        if cfg.final_logit_softcap:
+            out = cfg.final_logit_softcap * jnp.tanh(
+                out / cfg.final_logit_softcap
+            )
+        return out
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return init_ssm_state(cfg, batch, cfg.num_layers)
+        if cfg.family == "hybrid":
+            n_lru, n_att = _hybrid_layout(cfg)
+            w = cfg.lru_width or cfg.d_model
+            win = min(max_len, cfg.window) if cfg.window else max_len
+            return {
+                "h": jnp.zeros((n_lru, batch, w), cfg.jnp_dtype),
+                "conv": jnp.zeros(
+                    (n_lru, batch, cfg.conv_width - 1, w), cfg.jnp_dtype
+                ),
+                "k": jnp.zeros(
+                    (n_att, batch, cfg.num_kv_heads, win, cfg.head_dim),
+                    cfg.jnp_dtype,
+                ),
+                "v": jnp.zeros(
+                    (n_att, batch, cfg.num_kv_heads, win, cfg.head_dim),
+                    cfg.jnp_dtype,
+                ),
+            }
+        if cfg.mla:
+            n_dense = cfg.first_dense_layers
+            cache = {
+                "c_kv": jnp.zeros(
+                    (cfg.num_layers - n_dense, batch, max_len, cfg.kv_lora_rank),
+                    cfg.jnp_dtype,
+                ),
+                "k_rope": jnp.zeros(
+                    (cfg.num_layers - n_dense, batch, max_len, cfg.qk_rope_dim),
+                    cfg.jnp_dtype,
+                ),
+            }
+            if n_dense:
+                # deepseek's leading dense layers still use MLA attention
+                cache["k0"] = jnp.zeros(
+                    (n_dense, batch, max_len, cfg.kv_lora_rank), cfg.jnp_dtype
+                )
+                cache["v0"] = jnp.zeros(
+                    (n_dense, batch, max_len, cfg.qk_rope_dim), cfg.jnp_dtype
+                )
+            return cache
+        n_dense = cfg.first_dense_layers if cfg.num_experts else 0
+        return {
+            "k": jnp.zeros(
+                (cfg.num_layers - n_dense, batch, cfg.num_kv_heads, max_len,
+                 cfg.head_dim), cfg.jnp_dtype,
+            ),
+            "v": jnp.zeros(
+                (cfg.num_layers - n_dense, batch, cfg.num_kv_heads, max_len,
+                 cfg.head_dim), cfg.jnp_dtype,
+            ),
+        }
+
+    def prefill(self, params, batch, cache) -> Tuple[jax.Array, Dict]:
+        x = self.embed(params, batch)
+        positions = jnp.arange(x.shape[1])
+        x, cache = self.backbone(
+            params, x, positions=positions, cache=cache,
+            cache_pos=jnp.asarray(0, jnp.int32), train=False,
+        )
+        return self.logits_last(params, x[:, -1]), cache
+
+    def decode_step(self, params, batch, cache, pos) -> Tuple[jax.Array, Dict]:
+        """One new token against an existing cache filled to ``pos``."""
+        x = self.embed(params, batch)
+        positions = jnp.asarray(pos)[None]
+        x, cache = self.backbone(
+            params, x, positions=positions, cache=cache,
+            cache_pos=jnp.asarray(pos, jnp.int32), train=False,
+        )
+        return self.logits_last(params, x[:, -1]), cache
+
+
+# ---------------------------------------------------------------------------
+# functional entry points (used by launch/dryrun and tests)
+# ---------------------------------------------------------------------------
+def train_step_fn(cfg: ModelConfig):
+    model = LM(cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    return loss_fn
+
+
+def prefill_fn(cfg: ModelConfig):
+    model = LM(cfg)
+
+    def fn(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return fn
+
+
+def decode_step_fn(cfg: ModelConfig):
+    model = LM(cfg)
+
+    def fn(params, batch, cache, pos):
+        return model.decode_step(params, batch, cache, pos)
+
+    return fn

@@ -1,0 +1,223 @@
+"""Mamba-2 blocks — SSD (state-space duality) [arXiv:2405.21060].
+
+Chunked SSD algorithm in pure jnp (the Pallas kernel in
+``repro/kernels/ssd.py`` accelerates the intra-chunk matmuls; this
+module is also its oracle).  Decode keeps an O(1) recurrent state
+(B, H, P, N) + a conv ring buffer, which is what makes the
+``long_500k`` cell runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_AXES, ashard, dense_init, rms_norm
+from .config import ModelConfig
+
+__all__ = [
+    "mamba_init",
+    "mamba_apply",
+    "mamba_decode_step",
+    "init_ssm_state",
+    "ssd_chunked",
+]
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked; faithful to the Mamba-2 minimal listing)
+# ---------------------------------------------------------------------------
+def ssd_chunked(
+    x: jax.Array,      # (B, L, H, P)
+    dt: jax.Array,     # (B, L, H)   softplus-activated step sizes
+    A: jax.Array,      # (H,)        negative decay rates
+    Bm: jax.Array,     # (B, L, G, N)
+    Cm: jax.Array,     # (B, L, G, N)
+    chunk: int = 256,
+    init_state: Optional[jax.Array] = None,   # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N)).
+
+    Within each chunk the quadratic "attention-like" form is used;
+    states are carried across chunks with a scan (linear in L).
+    """
+    b, l, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert h % g == 0
+    hpg = h // g
+    chunk = min(chunk, l)
+    nb = -(-l // chunk)
+    pad = nb * chunk - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # chunk-major layout for the scan: (nb, B, C, ...)
+    xc = jnp.moveaxis(x.reshape(b, nb, chunk, h, p), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, nb, chunk, h), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(b, nb, chunk, g, n), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(b, nb, chunk, g, n), 1, 0)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    s0 = (
+        init_state.astype(jnp.float32) if init_state is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+
+    def step(state, xs):
+        xk, dtk, Bk, Ck = xs                       # (B,C,H,P) (B,C,H) (B,C,G,N)
+        ack = jnp.cumsum(dtk.astype(jnp.float32) * A, axis=1)     # (B,C,H)
+        # intra-chunk quadratic form: weight_{t,s} = C_t.B_s *
+        #   exp(acum_t - acum_s) * dt_s   for s <= t
+        seg = ack[:, :, None, :] - ack[:, None, :, :]             # (B,C,C,H)
+        # mask INSIDE the exp: masked entries are positive-large, and
+        # where(mask, exp(seg), 0) NaNs the gradient (0 * inf)
+        seg = jnp.where(causal[None, :, :, None], seg, -jnp.inf)
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("bcgn,bsgn->bcsg", Ck, Bk,
+                        preferred_element_type=jnp.float32)
+        cb = jnp.repeat(cb, hpg, axis=-1)                          # (B,C,C,H)
+        w = cb * decay * dtk[:, None, :, :]
+        y_intra = jnp.einsum("bcsh,bshp->bchp", w, xk.astype(jnp.float32))
+        # inter-chunk: y += C_t exp(acum_t) state_in
+        Ch = jnp.repeat(Ck, hpg, axis=2) if g != h else Ck         # (B,C,H,N)
+        y_inter = jnp.einsum(
+            "bchn,bhpn,bch->bchp", Ch.astype(jnp.float32), state,
+            jnp.exp(ack),
+        )
+        # state update: state' = exp(acum_C) state + sum_s decay_to_end dt B x
+        d2e = jnp.exp(ack[:, -1:, :] - ack)                        # (B,C,H)
+        Bh = jnp.repeat(Bk, hpg, axis=2) if g != h else Bk
+        contrib = jnp.einsum(
+            "bch,bchn,bchp->bhpn",
+            dtk * d2e, Bh.astype(jnp.float32), xk.astype(jnp.float32),
+        )
+        new_state = state * jnp.exp(ack[:, -1, :])[:, :, None, None] + contrib
+        return new_state, (y_intra + y_inter).astype(x.dtype)
+
+    final, ys = jax.lax.scan(step, s0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nb * chunk, h, p)
+    if pad:
+        y = y[:, :l]
+    return y, final.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+def mamba_init(key, cfg: ModelConfig) -> Dict:
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * din + 2 * g * n + h
+    return {
+        "in_proj": dense_init(ks[0], (d, in_dim), cfg.jnp_dtype),
+        "conv": dense_init(ks[1], (cfg.conv_width, din + 2 * g * n), cfg.jnp_dtype,
+                           scale=0.5),
+        "A_log": jnp.zeros((h,), jnp.float32) + jnp.log(
+            jnp.linspace(1.0, 16.0, h)
+        ),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((din,), cfg.jnp_dtype),
+        "out_proj": dense_init(ks[2], (din, d), cfg.jnp_dtype),
+    }
+
+
+def _split_in(cfg: ModelConfig, zxbcdt: jax.Array):
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din: 2 * din + 2 * g * n]
+    dt = zxbcdt[..., 2 * din + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d; ``state`` is the (B, W-1, C) ring buffer
+    for decode.  Returns (out, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xbc[:, : width - 1])
+        ctx = jnp.concatenate([pad, xbc], axis=1)
+    else:
+        ctx = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(
+        ctx[:, i: i + xbc.shape[1]] * w[i] for i in range(width)
+    )
+    new_state = ctx[:, -(width - 1):] if width > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba_apply(
+    params: Dict,
+    x: jax.Array,                     # (B, L, D)
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,     # decode: {"ssm": (B,H,P,N), "conv": (B,W-1,C)}
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, l, d = x.shape
+    din, g, n, h, p = (
+        cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    )
+    zxbcdt = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    zxbcdt = ashard(zxbcdt, BATCH_AXES, None, "model")
+    z, xbc, dt = _split_in(cfg, zxbcdt)
+
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv"], conv_state)
+
+    xs = xbc[..., :din].reshape(b, l, h, p)
+    Bm = xbc[..., din: din + g * n].reshape(b, l, g, n)
+    Cm = xbc[..., din + g * n:].reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    if state is None:
+        y, final = ssd_chunked(xs, dt, A, Bm, Cm, chunk=cfg.ssd_chunk)
+        new_state = None
+    elif l == 1:
+        y, final = _ssm_step(xs, dt, A, Bm, Cm, state["ssm"], h // g)
+        new_state = {"ssm": final, "conv": new_conv}
+    else:  # stateful prefill: chunked scan seeded with the carried state
+        y, final = ssd_chunked(
+            xs, dt, A, Bm, Cm, chunk=cfg.ssd_chunk,
+            init_state=state["ssm"],
+        )
+        new_state = {"ssm": final, "conv": new_conv}
+
+    y = y + xs * params["D"][None, None, :, None]
+    y = y.reshape(b, l, din).astype(x.dtype)   # D is f32; keep model dtype
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    if state is None:
+        return ashard(out, BATCH_AXES, None, None), None
+    return ashard(out, BATCH_AXES, None, None), new_state
+
+
+def _ssm_step(xs, dt, A, Bm, Cm, ssm, hpg):
+    """Single-token recurrence: h' = exp(dt*A) h + dt * B x^T; y = C h."""
+    # shapes: xs (B,1,H,P), dt (B,1,H), Bm/Cm (B,1,G,N), ssm (B,H,P,N)
+    x0 = xs[:, 0]                       # (B,H,P)
+    d0 = dt[:, 0]                       # (B,H)
+    B0 = jnp.repeat(Bm[:, 0], hpg, axis=1)  # (B,H,N)
+    C0 = jnp.repeat(Cm[:, 0], hpg, axis=1)
+    decay = jnp.exp(d0 * A)             # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", d0, B0, x0)
+    new = ssm * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new, C0)
+    return y[:, None], new
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, layers: int) -> Dict:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((layers, batch, h, p, n), cfg.jnp_dtype),
+        "conv": jnp.zeros((layers, batch, cfg.conv_width - 1, conv_ch), cfg.jnp_dtype),
+    }
+
+
+def mamba_decode_step(params, x, cfg, state_layer):
+    return mamba_apply(params, x, cfg, state=state_layer)

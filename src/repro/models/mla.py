@@ -1,0 +1,152 @@
+"""Multi-head Latent Attention (deepseek-v2 [arXiv:2405.04434]).
+
+Queries go through a low-rank bottleneck (q_lora); keys/values are
+reconstructed from a compressed latent ``c_kv`` (kv_lora_rank) plus a
+shared rope key.  The decode cache stores only ``(c_kv, k_rope)`` —
+(512 + 64) per token instead of ``2 * H * d_h`` — MLA's raison d'etre.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_AXES, ashard, chunked_attention, dense_init, rms_norm, rope
+from .config import ModelConfig
+
+__all__ = ["mla_init", "mla_apply", "init_mla_cache"]
+
+
+def mla_init(key, cfg: ModelConfig) -> Dict:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "q_down": dense_init(ks[0], (d, qr), cfg.jnp_dtype),
+        "q_norm": jnp.ones((qr,), cfg.jnp_dtype),
+        "q_up": dense_init(ks[1], (qr, h * (dn + dr)), cfg.jnp_dtype),
+        "kv_down": dense_init(ks[2], (d, kvr), cfg.jnp_dtype),
+        "kv_norm": jnp.ones((kvr,), cfg.jnp_dtype),
+        "k_rope": dense_init(ks[3], (d, dr), cfg.jnp_dtype),
+        "k_up": dense_init(ks[4], (kvr, h * dn), cfg.jnp_dtype),
+        "v_up": dense_init(ks[5], (kvr, h * dv), cfg.jnp_dtype),
+        "wo": dense_init(ks[6], (h * dv, d), cfg.jnp_dtype),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, layers: int):
+    return {
+        "c_kv": jnp.zeros((layers, batch, max_len, cfg.kv_lora_rank), cfg.jnp_dtype),
+        "k_rope": jnp.zeros((layers, batch, max_len, cfg.qk_rope_dim), cfg.jnp_dtype),
+    }
+
+
+def _absorbed_decode(params, cfg, q_nope, q_rope, c_kv, k_rope, pos,
+                     b, h, dn, dr, dv):
+    """Latent-space MLA decode: one query token against the compressed
+    cache.  q_nope (B,1,H,dn), q_rope (B,1,H,dr) post-rope;
+    c_kv (B,Lmax,r), k_rope (B,Lmax,dr)."""
+    r = cfg.kv_lora_rank
+    lmax = c_kv.shape[1]
+    k_up = params["k_up"].reshape(r, h, dn)
+    v_up = params["v_up"].reshape(r, h, dv)
+
+    # fold k_up into the query: q_lat (B, H, r)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], k_up)
+    s = jnp.einsum(
+        "bhr,blr->bhl", q_lat, c_kv, preferred_element_type=jnp.float32
+    ) + jnp.einsum(
+        "bhd,bld->bhl", q_rope[:, 0], k_rope,
+        preferred_element_type=jnp.float32,
+    )
+    s = s / math.sqrt(dn + dr)
+    mask = jnp.arange(lmax)[None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum(
+        "bhl,blr->bhr", p.astype(c_kv.dtype), c_kv,
+        preferred_element_type=jnp.float32,
+    )
+    out_h = jnp.einsum("bhr,rhd->bhd", ctx.astype(v_up.dtype), v_up)
+    return out_h.reshape(b, 1, h * dv)
+
+
+def mla_apply(
+    params: Dict,
+    x: jax.Array,                  # (B, L, D)
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[Tuple[jax.Array, jax.Array]] = None,  # (c_kv, k_rope): (B,Lmax,r)
+    cache_pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    b, l, d = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    # queries
+    cq = rms_norm(jnp.einsum("bld,dr->blr", x, params["q_down"]), params["q_norm"])
+    q = jnp.einsum("blr,rh->blh", cq, params["q_up"]).reshape(b, l, h, dn + dr)
+    q = ashard(q, BATCH_AXES, None, "model", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(
+        q_rope.transpose(0, 2, 1, 3), positions, cfg.rope_theta
+    ).transpose(0, 2, 1, 3)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1).transpose(0, 2, 1, 3)
+
+    # compressed KV latent + shared rope key
+    c_kv = rms_norm(
+        jnp.einsum("bld,dr->blr", x, params["kv_down"]), params["kv_norm"]
+    )
+    k_r = jnp.einsum("bld,dr->blr", x, params["k_rope"])        # (B, L, dr)
+    k_r = rope(k_r, positions, cfg.rope_theta)
+
+    kv_valid = None
+    if cache is not None:
+        cc, cr = cache
+        pos = cache_pos if cache_pos is not None else jnp.asarray(0)
+        cc = jax.lax.dynamic_update_slice(cc, c_kv, (0, pos, 0))
+        cr = jax.lax.dynamic_update_slice(cr, k_r, (0, pos, 0))
+        c_kv, k_r = cc, cr
+        new_cache = (cc, cr)
+        kv_valid = pos + l
+        q_offset = pos
+        if l == 1:
+            # absorbed decode (§Perf iteration 7): fold k_up into the
+            # query and v_up into the output so attention scores run
+            # directly against the (L, r) latent — per-step FLOPs drop
+            # from O(L*H*r*(dn+dv)) (reconstructing every cached k/v) to
+            # O(L*H*r), and the (B, L, H, dn+dr) k tensor never exists
+            out = _absorbed_decode(
+                params, cfg, q_nope, q_rope, cc, cr, pos, b, h, dn, dr, dv
+            )
+            out = jnp.einsum("blh,hd->bld", out, params["wo"])
+            return ashard(out, BATCH_AXES, None, None), new_cache
+    else:
+        new_cache = None
+        q_offset = 0
+
+    lk = c_kv.shape[1]
+    # reconstruct per-head keys/values from the latent
+    k_nope = jnp.einsum("blr,rh->blh", c_kv, params["k_up"]).reshape(b, lk, h, dn)
+    v = jnp.einsum("blr,rh->blh", c_kv, params["v_up"]).reshape(b, lk, h, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_r[:, :, None, :], (b, lk, h, dr))], axis=-1
+    ).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    # pad v head dim up to the qk head dim for the shared attention core
+    out = chunked_attention(
+        q, k,
+        jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv))),
+        causal=True, window=0, softcap=0.0,
+        q_offset=q_offset, kv_offset=0, kv_valid_len=kv_valid,
+        scale=1.0 / math.sqrt(dn + dr),
+    )[..., :dv]
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, h * dv)
+    out = jnp.einsum("blh,hd->bld", out, params["wo"])
+    return ashard(out, BATCH_AXES, None, None), new_cache

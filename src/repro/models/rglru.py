@@ -1,0 +1,113 @@
+"""RG-LRU recurrent blocks (recurrentgemma / Griffin [arXiv:2402.19427]).
+
+Gated linear recurrence::
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` (parallel over L — this is
+the SP-friendly form); decode is a single fused step.  The recurrence
+is elementwise over the width, so it shards perfectly over 'model'.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_AXES, ashard, dense_init
+from .config import ModelConfig
+
+__all__ = ["rglru_init", "rglru_apply", "init_lru_state"]
+
+_C = 8.0  # Griffin's fixed temperature
+
+
+def rglru_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        # linear block in/out (Griffin recurrent block: proj -> conv ->
+        # rg-lru -> proj, with a gated branch)
+        "in_x": dense_init(ks[0], (d, w), cfg.jnp_dtype),
+        "in_gate": dense_init(ks[1], (d, w), cfg.jnp_dtype),
+        "conv": dense_init(ks[2], (cfg.conv_width, w), cfg.jnp_dtype, scale=0.5),
+        "w_r": dense_init(ks[3], (w, w), cfg.jnp_dtype, scale=0.02),
+        "w_i": dense_init(ks[4], (w, w), cfg.jnp_dtype, scale=0.02),
+        # Lambda parameterised so a^c in (0.9, 0.999) at init
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.linspace(0.35, 0.9, w))), jnp.float32
+        ),
+        "out": dense_init(ks[5], (w, d), cfg.jnp_dtype),
+    }
+
+
+def _conv1d(x, w, state=None):
+    width = w.shape[0]
+    if state is None:
+        ctx = jnp.concatenate([jnp.zeros_like(x[:, : width - 1]), x], axis=1)
+    else:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(ctx[:, i: i + x.shape[1]] * w[i] for i in range(width))
+    new_state = ctx[:, -(width - 1):] if width > 1 else None
+    return out, new_state
+
+
+def rglru_apply(
+    params: Dict,
+    x: jax.Array,                    # (B, L, D)
+    cfg: ModelConfig,
+    state: Optional[Dict] = None,    # {"h": (B, W), "conv": (B, cw-1, W)}
+) -> Tuple[jax.Array, Optional[Dict]]:
+    xb = jnp.einsum("bld,dw->blw", x, params["in_x"])
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, params["in_gate"]))
+    xb = ashard(xb, BATCH_AXES, None, "model")
+
+    conv_state = state["conv"] if state is not None else None
+    xb, new_conv = _conv1d(xb, params["conv"], conv_state)
+
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xb, params["w_r"]))
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", xb, params["w_i"]))
+    log_a = (
+        -_C * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    )  # (B, L, W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i.astype(jnp.float32) * xb.astype(jnp.float32)
+    )
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    if state is None:
+        # parallel linear recurrence: h_t = a_t h_{t-1} + b_t
+        _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        new_state = None
+    elif x.shape[1] == 1:
+        h0 = state["h"].astype(jnp.float32)
+        h = a[:, 0] * h0 + gated[:, 0]
+        new_state = {"h": h.astype(cfg.jnp_dtype), "conv": new_conv}
+        h = h[:, None]
+    else:
+        # stateful prefill: fold h0 into the first step, then scan
+        h0 = state["h"].astype(jnp.float32)
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+        _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        new_state = {"h": h[:, -1].astype(cfg.jnp_dtype), "conv": new_conv}
+
+    out = jnp.einsum("blw,wd->bld", h.astype(x.dtype) * gate, params["out"])
+    return ashard(out, BATCH_AXES, None, None), new_state
+
+
+def init_lru_state(cfg: ModelConfig, batch: int, layers: int) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((layers, batch, w), cfg.jnp_dtype),
+        "conv": jnp.zeros((layers, batch, cfg.conv_width - 1, w), cfg.jnp_dtype),
+    }

@@ -1,0 +1,136 @@
+"""Continuous-batching serving engine for one model.
+
+Fixed-slot batching (vLLM-style static slots): a (B, max_len) KV cache
+is allocated once; requests claim slots, prefill writes their prompt
+into the slot's cache rows, and one fused decode step advances every
+active slot per iteration.  Slot-level bookkeeping is host-side; the
+device work is two jit'd callables (prefill one request into a slot,
+decode the whole batch).
+
+Per-slot cache positions: the decode step takes a (B,) position vector
+and a (B,) active mask so ragged requests coexist in one batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import LM
+from ..models.config import ModelConfig
+from .request import Request, RequestState
+
+__all__ = ["EngineConfig", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    greedy: bool = True
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.model = LM(cfg)
+        self.params = params
+        self.cache = self.model.init_cache(ecfg.max_batch, ecfg.max_len)
+        self.free_slots = list(range(ecfg.max_batch))
+        self.active: Dict[int, Request] = {}
+        self.queue: List[Request] = []
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        model, B = self.model, self.ecfg.max_batch
+
+        def prefill_slot(params, cache, tokens, slot):
+            """Prefill one request (batch-1) and scatter its KV rows into
+            batch slot ``slot``."""
+            small = model.init_cache(1, self.ecfg.max_len)
+            logits, small = model.prefill(params, {"tokens": tokens}, small)
+            def put(big, new):
+                if big.ndim == new.ndim and big.shape[1] == B:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        big, new.astype(big.dtype), slot, axis=1
+                    )
+                return big
+            cache = jax.tree.map(put, cache, small)
+            return logits, cache
+
+        def decode(params, cache, tokens, positions, active):
+            """One token for every active slot.  The decode step is
+            position-uniform, so it runs at the max active position;
+            ragged slots stay correct because each slot's earlier cache
+            rows were written at its own positions and causal masking
+            ignores the (zero) rows beyond a slot's own length."""
+            pos = jnp.max(jnp.where(active, positions, 0))
+            logits, cache = model.decode_step(params, {"tokens": tokens}, cache, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        self._prefill = jax.jit(prefill_slot)
+        self._decode = jax.jit(decode)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and self.free_slots:
+            req = self.queue.pop(0)
+            slot = self.free_slots.pop(0)
+            req.slot = slot
+            req.state = RequestState.PREFILLING
+            tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, self.cache = self._prefill(
+                self.params, self.cache, tokens, slot
+            )
+            tok = int(jnp.argmax(logits[0, -1] if logits.ndim == 3 else logits[0]))
+            req.generated.append(tok)
+            req.pos = len(req.prompt)
+            req.first_token_s = time.time()
+            req.state = RequestState.DECODING
+            self.active[slot] = req
+
+    def step(self) -> int:
+        """One engine iteration; returns #completed requests."""
+        self._admit()
+        if not self.active:
+            return 0
+        B = self.ecfg.max_batch
+        toks = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        act = np.zeros((B,), bool)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.generated[-1]
+            pos[slot] = req.pos
+            act[slot] = True
+        nxt, self.cache = self._decode(
+            self.params, self.cache,
+            jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(act),
+        )
+        nxt = np.asarray(nxt)
+        done = 0
+        for slot, req in list(self.active.items()):
+            req.generated.append(int(nxt[slot]))
+            req.pos += 1
+            if req.done or req.pos >= self.ecfg.max_len - 1:
+                req.state = RequestState.DONE
+                req.finish_s = time.time()
+                del self.active[slot]
+                self.free_slots.append(slot)
+                done += 1
+        return done
+
+    def run_until_drained(self, max_iters: int = 10000) -> None:
+        it = 0
+        while (self.queue or self.active) and it < max_iters:
+            self.step()
+            it += 1

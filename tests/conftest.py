@@ -1,0 +1,9 @@
+import os
+
+# tests and benches run single-device (the 512-device flag is set ONLY
+# inside repro.launch.dryrun, never globally)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

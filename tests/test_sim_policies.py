@@ -1,0 +1,138 @@
+"""Tile-stream simulator + scheduling-policy behaviour tests (§III-C,
+§IV, §V-B)."""
+import numpy as np
+import pytest
+
+from repro.core.experiment import ExperimentSpec, POLICIES, run_experiment
+from repro.core.runtime import fit_quota
+from repro.core.runtime.l2p import L2PMap
+from repro.core.sim.engine import Job
+
+
+@pytest.fixture(scope="module")
+def light_reports():
+    out = {}
+    for pol in ("cyc", "cyc_s", "tp_driven", "pglb", "reserv", "ads_tile"):
+        out[pol] = run_experiment(ExperimentSpec(
+            policy=pol, tiles=400, cockpit_replicas=1, duration_s=0.6, seed=1,
+        ))
+    return out
+
+
+def test_capacity_decomposition(light_reports):
+    for pol, r in light_reports.items():
+        total = r.effective_frac + r.realloc_frac + r.idle_frac
+        assert np.isclose(total, 1.0, atol=1e-6), pol
+        assert 0 <= r.violation_rate <= 1
+        assert 0 <= r.task_miss_rate <= 1
+
+
+def test_cyc_never_reallocates(light_reports):
+    assert light_reports["cyc"].n_realloc == 0
+    assert light_reports["cyc"].realloc_frac == 0.0
+    assert light_reports["cyc_s"].n_realloc == 0
+
+
+def test_elastic_cyc_reduces_misses(light_reports):
+    """Fig. 11a: slack sharing improves reliability at equal resources."""
+    assert (
+        light_reports["cyc_s"].task_miss_rate
+        <= light_reports["cyc"].task_miss_rate
+    )
+
+
+def test_ads_tile_bounds_realloc_waste(light_reports):
+    """Headline: wasted processing capacity < 1.2% for ADS-Tile while
+    work-conserving realloc waste is markedly higher."""
+    ads = light_reports["ads_tile"]
+    tp = light_reports["tp_driven"]
+    assert ads.realloc_frac < 0.012
+    assert ads.realloc_frac < tp.realloc_frac
+
+
+def test_partitioning_cuts_realloc_cost(light_reports):
+    """Fig. 11b: same work-conserving policy, partition-local stalls."""
+    assert (
+        light_reports["pglb"].realloc_frac
+        < light_reports["tp_driven"].realloc_frac
+    )
+
+
+def test_heavy_load_tp_collapses():
+    """§III-C2 / Fig. 13: at heavy load the work-conserving scheduler
+    wastes double-digit capacity on reallocation."""
+    tp = run_experiment(ExperimentSpec(
+        policy="tp_driven", tiles=400, cockpit_replicas=6,
+        deadline_s=0.09, duration_s=0.6, seed=1,
+    ))
+    ads = run_experiment(ExperimentSpec(
+        policy="ads_tile", tiles=400, cockpit_replicas=6,
+        deadline_s=0.09, q=0.9, duration_s=0.6, seed=1,
+    ))
+    assert tp.realloc_frac > 0.10
+    assert ads.realloc_frac < 0.012
+    assert ads.task_miss_rate <= tp.task_miss_rate + 0.05
+
+
+def test_seed_determinism():
+    a = run_experiment(ExperimentSpec(policy="ads_tile", duration_s=0.4, seed=7))
+    b = run_experiment(ExperimentSpec(policy="ads_tile", duration_s=0.4, seed=7))
+    assert a.task_miss_rate == b.task_miss_rate
+    assert a.n_realloc == b.n_realloc
+    assert a.effective_frac == b.effective_frac
+
+
+def test_all_policy_names_construct():
+    from repro.core.experiment import make_policy
+    for name in POLICIES:
+        assert make_policy(name) is not None
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# runtime primitives
+# ---------------------------------------------------------------------------
+def _job(work=1e12, io=1e-4, sync=0.0):
+    return Job(
+        jid=0, task="t", cycle=0, idx=0, release=0.0, is_sensor=False,
+        work_flops=work, io_s=io, sync_s=sync, partition=0,
+        ert=0.0, sub_ddl=1.0, e2e_ddl=2.0, plan_dop=4,
+    )
+
+
+def test_fit_quota_minimal():
+    job = _job()
+    tf = 1.024e12
+    cands = (1, 2, 4, 8, 16)
+    # generous target: pick the smallest candidate that fits
+    c = fit_quota(job, cands, target_t=2.0, now=0.0, tile_flops=tf, cap=16)
+    assert c == 1
+    # tight target: escalate
+    need = job.duration(4, tf)
+    c = fit_quota(job, cands, target_t=need * 1.01, now=0.0, tile_flops=tf, cap=16)
+    assert c == 4
+    # impossible target: best effort = largest within cap
+    c = fit_quota(job, cands, target_t=1e-6, now=0.0, tile_flops=tf, cap=8)
+    assert c == 8
+    # nothing fits the cap
+    c = fit_quota(job, cands, target_t=1.0, now=0.0, tile_flops=tf, cap=0)
+    assert c == 0
+
+
+def test_l2p_minimal_moves():
+    m = L2PMap(16)
+    first = m.allocate(1, 8)
+    assert len(first) == 8
+    # shrink: keeps a subset, moves |8-4| tiles of state
+    assert m.moved_tiles(1, 4) == 4
+    second = m.allocate(1, 4)
+    assert second < first
+    # grow back: reuses its 4 + takes 4 free
+    third = m.allocate(1, 8)
+    assert second <= third
+    m.release(1)
+    assert len(m.free_tiles()) == 16
+    m.allocate(2, 16)
+    with pytest.raises(ValueError):
+        m.allocate(3, 1)

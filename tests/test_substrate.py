@@ -1,0 +1,186 @@
+"""Substrate tests: checkpointing (fault tolerance), data pipeline,
+optimizer, serving engine, elastic helpers, sharding rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distribution.elastic import StragglerMonitor
+from repro.distribution.sharding import batch_specs, cache_specs, param_specs
+from repro.models import LM, init_params
+from repro.serving import EngineConfig, Request, ServingEngine
+from repro.training import AdamWConfig, TrainConfig, Trainer, adamw_init, adamw_update
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, synthetic_stream
+from repro.training.optimizer import (
+    compress_grads_int8,
+    decompress_grads_int8,
+    global_norm,
+)
+
+
+# ---------------------------------------------------------------------------
+def test_adamw_reduces_loss():
+    cfg = get_config("phi4_mini_3p8b", reduced=True)
+    model = LM(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    acfg = AdamWConfig(lr=3e-3, warmup_steps=1)
+    data = synthetic_stream(cfg, DataConfig(batch=4, seq_len=32, seed=3))
+    batch = next(data)  # overfit one batch
+
+    @jax.jit
+    def step(params, opt):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        p2, o2, _ = adamw_update(acfg, params, grads, opt)
+        return p2, o2, loss
+
+    losses = []
+    for _ in range(20):
+        params, opt, loss = step(params, opt)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_grad_compression_roundtrip():
+    tree = {"a": jnp.linspace(-3, 3, 1000).reshape(10, 100),
+            "b": {"c": jnp.ones((7,)) * 0.01}}
+    comp = compress_grads_int8(tree)
+    back = decompress_grads_int8(comp)
+    for k, orig in (("a", tree["a"]), ):
+        err = float(jnp.max(jnp.abs(back["a"] - orig)))
+        assert err <= float(jnp.max(jnp.abs(orig))) / 127 + 1e-6
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {
+        "params": {"w": np.arange(6.0).reshape(2, 3), "b": np.zeros(3)},
+        "opt_state": {"m": {"w": np.ones((2, 3))}},
+        "step": 7,
+    }
+    mgr.save(7, state)
+    mgr.save(14, state)
+    mgr.save(21, state)
+    assert mgr.all_steps() == [14, 21]  # keep=2 garbage-collects
+    back = mgr.restore(21)
+    np.testing.assert_array_equal(back["params"]["w"], state["params"]["w"])
+    assert int(back["step"]) == 7
+
+
+def test_trainer_resume_determinism(tmp_path):
+    """Fault tolerance: crash-and-restore reproduces the uninterrupted
+    run exactly (same data stream, same final loss)."""
+    cfg = get_config("granite_moe_1b", reduced=True)
+    dcfg = DataConfig(batch=4, seq_len=16, seed=11)
+
+    def run(steps, ckpt_dir, resume=False):
+        t = Trainer(cfg, TrainConfig(
+            steps=steps, log_every=1, checkpoint_every=2,
+            checkpoint_dir=ckpt_dir,
+        ), seed=1)
+        if resume:
+            assert t.restore_if_available()
+        data = synthetic_stream(cfg, dcfg, start_step=t.step)
+        return t.fit(data)
+
+    full = run(6, str(tmp_path / "a"))
+    part = run(4, str(tmp_path / "b"))          # "crash" after step 4
+    resumed = run(6, str(tmp_path / "b"), resume=True)
+    f = {r["step"]: r["loss"] for r in full["history"]}
+    r = {r["step"]: r["loss"] for r in resumed["history"]}
+    for s in (5, 6):
+        assert np.isclose(f[s], r[s], rtol=1e-5), (s, f[s], r[s])
+
+
+def test_data_stream_deterministic():
+    cfg = get_config("phi4_mini_3p8b", reduced=True)
+    a = next(synthetic_stream(cfg, DataConfig(seed=5), start_step=3))
+    b = next(synthetic_stream(cfg, DataConfig(seed=5), start_step=3))
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_serving_engine_drains():
+    cfg = get_config("phi4_mini_3p8b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=3, max_len=64))
+    rng = np.random.RandomState(0)
+    reqs = [
+        Request(rid=i, prompt=rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32),
+                max_new_tokens=5)
+        for i in range(7)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    for r in reqs:
+        assert len(r.generated) >= r.max_new_tokens
+        assert all(0 <= t < cfg.vocab_size for t in r.generated)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=3.0)
+    flagged = [mon.observe(i, 0.1 + 0.001 * (i % 3)) for i in range(30)]
+    assert not any(flagged)
+    assert mon.observe(31, 1.5)   # 15x normal -> straggler
+
+
+# ---------------------------------------------------------------------------
+def test_param_specs_structure():
+    cfg = get_config("deepseek_v2_236b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    specs = param_specs(cfg, params, fsdp=True)
+    assert jax.tree.structure(
+        params
+    ) == jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P))
+
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P)
+    )[0]
+    by_name = {}
+    for path, spec in flat:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        by_name.setdefault(name, spec)
+    # experts sharded over model (EP), norms replicated
+    moe_wg = [
+        s for p, s in flat
+        if any(getattr(x, "key", "") == "moe" for x in p)
+        and getattr(p[-1], "key", "") == "wg"
+        and not any(getattr(x, "key", "") == "shared" for x in p)
+    ]
+    assert moe_wg and all("model" in str(s) for s in moe_wg)
+    assert by_name["final_norm"] == P(None)
+
+
+def test_cache_specs_fallbacks():
+    cfg = get_config("gemma3_4b")  # kv=4, not divisible by 16
+    model = LM(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    specs = cache_specs(cfg, cache, batch_shardable=True, model_size=16)
+    # heads can't shard 16-way -> sequence dim takes 'model'
+    assert specs["k"] == P(None, ("pod", "data"), None, "model", None)
+
+    cfg2 = get_config("gemma2_27b")  # kv=16 divides
+    model2 = LM(cfg2)
+    cache2 = jax.eval_shape(lambda: model2.init_cache(128, 1024))
+    specs2 = cache_specs(cfg2, cache2, batch_shardable=True, model_size=16)
+    assert specs2["k"] == P(None, ("pod", "data"), "model", None, None)
+
+
+def test_dryrun_filter_spec():
+    from types import SimpleNamespace
+    from repro.launch import dryrun
+    # _filter_spec only reads axis names/sizes; a stub avoids needing
+    # 4 real devices inside the single-device test env
+    mesh = SimpleNamespace(
+        axis_names=("data", "model"), shape={"data": 2, "model": 2}
+    )
+    # non-divisible dim drops the axis
+    s = dryrun._filter_spec(P("model", None), mesh, (5, 4))
+    assert s == P(None, None)
+    s = dryrun._filter_spec(P(("pod", "data"), None), mesh, (4, 4))
+    assert s == P(("data",), None)
+    s = dryrun._filter_spec(P("model", "data"), mesh, (4, 4))
+    assert s == P("model", "data")

@@ -1,0 +1,108 @@
+"""Workload model + GHA compiler tests (paper §II-C2, §III-B)."""
+import numpy as np
+import pytest
+
+from repro.core.benchmark import COCKPIT_CHAINS, make_ads_benchmark
+from repro.core.gha import GHACompiler, Schedule, compile_schedule
+from repro.core.gha.guillotine import bind_memory_controllers, guillotine_cut
+from repro.core.gha.phase1 import run_phase1
+from repro.core.hardware import simba_chip
+from repro.core.latency_model import LatencyModel
+from repro.core.workload import unroll_hyperperiod
+
+
+@pytest.fixture(scope="module")
+def wf():
+    return make_ads_benchmark()
+
+
+@pytest.fixture(scope="module")
+def model(wf):
+    return LatencyModel.from_workflow(wf, simba_chip(400))
+
+
+def test_hyper_period(wf):
+    # lcm(1/30, 1/20, 1/10, 1/240) = 1/gcd(30,20,10,240) = 0.1 s
+    assert np.isclose(wf.hyper_period_s, 0.1)
+
+
+def test_unroll_counts(wf):
+    insts = unroll_hyperperiod(wf)
+    per_task = {}
+    for i in insts:
+        per_task[i.task] = per_task.get(i.task, 0) + 1
+    assert per_task["cam_multi"] == 3     # 30 Hz over 100 ms
+    assert per_task["cam_stereo"] == 2
+    assert per_task["lidar"] == 1
+    assert per_task["imu"] == 24
+    assert per_task["img_backbone"] == 3  # gated by cam_multi
+    assert per_task["traj_pred"] == 1     # gated by lidar (slowest pred)
+
+
+def test_unroll_dep_releases(wf):
+    insts = unroll_hyperperiod(wf)
+    by_key = {(i.task, i.index): i for i in insts}
+    for i in insts:
+        for (pt, pj) in i.preds:
+            assert by_key[(pt, pj)].release_s <= i.release_s + 1e-12
+
+
+def test_cockpit_replication_shares_backbone():
+    wf9 = make_ads_benchmark(cockpit_replicas=9)
+    names = set(wf9.tasks)
+    # shared stages exist exactly once
+    assert "img_backbone" in names and "img_backbone#r1" not in names
+    # replicated heads exist 9x
+    assert sum(1 for n in names if n.startswith("depth_est")) == 9
+    assert len(wf9.chains) == 9 + 8 * len(COCKPIT_CHAINS)
+
+
+def test_phase1_meets_deadlines(wf, model):
+    p1 = run_phase1(model, wf, q=0.95)
+    assert not p1.infeasible_chains
+    for chain in wf.chains:
+        total = sum(p1.budget(n) for n in chain.nodes)
+        assert total <= chain.deadline_s + 1e-9, chain.name
+        # topological consistency of offsets
+        for a, b in zip(chain.nodes, chain.nodes[1:]):
+            assert (
+                p1.start_offsets[b] + 1e-12
+                >= p1.start_offsets[a] + p1.budget(a)
+            )
+
+
+def test_compile_schedule_valid(wf, model):
+    for nparts in (1, 4, None):
+        s = compile_schedule(model, wf, q=0.95, num_partitions=nparts)
+        s.validate()
+        assert s.peak_tiles <= 400
+        # every DNN task planned, no sensor plans
+        assert set(s.plans) == {t.name for t in wf.dnn_tasks}
+
+
+def test_schedule_roundtrip(wf, model):
+    s = compile_schedule(model, wf, q=0.95, num_partitions=4)
+    s2 = Schedule.from_json(s.to_json())
+    assert s2.plans.keys() == s.plans.keys()
+    for t in s.plans:
+        assert s2.plans[t].dop == s.plans[t].dop
+        assert np.isclose(s2.plans[t].budget_s, s.plans[t].budget_s)
+
+
+def test_guillotine_properties():
+    rects = guillotine_cut((8, 16), [40, 30, 30, 20])
+    # disjointness + per-bin area guarantee
+    cells = np.zeros((8, 16), int)
+    for i, (r0, c0, h, w) in enumerate(rects):
+        assert h * w >= [40, 30, 30, 20][i]
+        assert 0 <= r0 and 0 <= c0 and r0 + h <= 8 and c0 + w <= 16
+        cells[r0:r0 + h, c0:c0 + w] += 1
+    assert cells.max() == 1  # no overlap (leftover tiles may stay idle)
+
+    mcs = bind_memory_controllers(rects, simba_chip(128))
+    assert all(0 <= m < 4 for m in mcs)
+
+
+def test_guillotine_rejects_oversubscription():
+    with pytest.raises(ValueError):
+        guillotine_cut((4, 4), [10, 10])
