@@ -6,30 +6,45 @@ One module per paper artifact (DESIGN.md §7):
   fig11 — ablations: reservation, partitioning, their interplay (Fig. 11)
   fig12 — E2E tail latency + violation rate vs tiles (Fig. 12)
   fig13 — scaling: max chains / min tiles / waste (Fig. 13)
+  figS  — driving scenarios: mode switches, replanning, MC sweeps
   table2 — scheduling-decision vs resharding overhead (Table II)
   roofline — §Roofline table from the dry-run artifacts
 
 ``--only fig11`` runs a subset; ``--duration`` scales simulated seconds
-(default keeps the full harness under ~15 min on this CPU container).
+(default keeps the full harness under ~15 min on this CPU container);
+``--jobs N`` runs independent suites in N worker processes (suite
+output is buffered per process and printed in order).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
 import sys
 import time
 
 from . import fig6_casestudy, fig11_ablation, fig12_e2e, fig13_scaling
-from . import headroom, roofline, table2_overhead
+from . import figS_scenarios, headroom, roofline, table2_overhead
 
 SUITES = {
     "fig6": fig6_casestudy.run,
     "fig11": fig11_ablation.run,
     "fig12": fig12_e2e.run,
     "fig13": fig13_scaling.run,
+    "figS": figS_scenarios.run,
     "table2": table2_overhead.run,
     "headroom": headroom.run,
     "roofline": roofline.run,
 }
+
+
+def _suite_worker(args: tuple) -> str:
+    """Run one suite with stdout captured (process-pool entry point)."""
+    name, duration, seed = args
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        SUITES[name](duration=duration, seed=seed)
+    return buf.getvalue()
 
 
 def main() -> None:
@@ -38,10 +53,29 @@ def main() -> None:
     ap.add_argument("--duration", type=float, default=1.0,
                     help="simulated seconds per experiment")
     ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="run independent suites in N worker processes")
     args = ap.parse_args()
 
     names = args.only.split(",") if args.only else list(SUITES)
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown} (choose from {list(SUITES)})")
     print("name,us_per_call,derived")
+    if args.jobs > 1 and len(names) > 1:
+        from repro.scenarios.runner import parallel_map
+
+        t0 = time.time()
+        outs = parallel_map(
+            _suite_worker,
+            [(n, args.duration, args.seed) for n in names],
+            jobs=args.jobs,
+        )
+        for name, out in zip(names, outs):
+            sys.stdout.write(out)
+            print(f"# {name} done", file=sys.stderr)
+        print(f"# all suites done in {time.time()-t0:.1f}s", file=sys.stderr)
+        return
     for name in names:
         t0 = time.time()
         SUITES[name](duration=args.duration, seed=args.seed)

@@ -18,7 +18,10 @@ from .sim import SimConfig, Simulator, SimReport
 from .sim.policy import Policy
 from .workload import Workflow
 
-__all__ = ["ExperimentSpec", "run_experiment", "make_policy", "POLICIES"]
+__all__ = [
+    "ExperimentSpec", "run_experiment", "make_policy", "POLICIES",
+    "build_stack",
+]
 
 POLICIES = (
     "cyc",            # static reservation, hard budgets (§III-A1)
@@ -74,7 +77,11 @@ class ExperimentSpec:
         return self.num_partitions
 
 
-def run_experiment(spec: ExperimentSpec) -> SimReport:
+def build_stack(spec):
+    """Workflow / hardware / latency model / GHA compiler construction
+    shared by the stationary runner and the scenario runner.  ``spec``
+    is any object with :class:`ExperimentSpec`'s workload fields (the
+    scenario runner's spec qualifies)."""
     wf = make_ads_benchmark(
         cockpit_replicas=spec.cockpit_replicas,
         load_factor=spec.load_factor,
@@ -87,6 +94,11 @@ def run_experiment(spec: ExperimentSpec) -> SimReport:
         dram_utilization=spec.dram_utilization,
     )
     compiler = GHACompiler(q=spec.q, num_partitions=spec.resolved_partitions())
+    return wf, hw, model, compiler
+
+
+def run_experiment(spec: ExperimentSpec) -> SimReport:
+    wf, _hw, model, compiler = build_stack(spec)
     sched = compiler.compile(model, wf)
     policy = make_policy(spec.policy)
     sim = Simulator(

@@ -11,5 +11,9 @@ and slack along DAG edges.
 from .reservation import fit_quota
 from .scheduler import AdsTilePolicy
 from .l2p import L2PMap
+from .replan import OnlineReplanner, SchedulePortfolio
 
-__all__ = ["AdsTilePolicy", "fit_quota", "L2PMap"]
+__all__ = [
+    "AdsTilePolicy", "fit_quota", "L2PMap",
+    "OnlineReplanner", "SchedulePortfolio",
+]

@@ -1,0 +1,105 @@
+"""Online replanning across driving modes (scenario subsystem runtime).
+
+The offline GHA schedule is compiled against *one* latency model; when
+the driving context shifts (urban -> downpour), every per-task budget
+and partition capacity in that table is stale.  Recompiling GHA online
+is far too slow for a mode switch, so the runtime keeps a *portfolio*
+of per-mode schedules precomputed offline (one GHA compile per
+registered mode, exactly like multi-version DoP compilation keeps
+per-DoP binaries, §IV-D2) and hot-swaps on ``mode_change`` through the
+engine's bounded-reallocation path — the swap stalls partitions and
+charges migration volume like any other reallocation, so its cost shows
+up in ``realloc_frac`` rather than being assumed free.
+
+Any :class:`~repro.core.sim.policy.Policy` can carry an
+:class:`OnlineReplanner`: the base class's ``on_mode_change`` delegates
+to ``policy.replanner`` when one is attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, TYPE_CHECKING
+
+from ..gha.compiler import GHACompiler
+from ..gha.schedule import Schedule
+from ..latency_model import LatencyModel
+from ..workload import Workflow
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..sim.engine import Simulator
+
+__all__ = ["SchedulePortfolio", "OnlineReplanner"]
+
+
+@dataclasses.dataclass
+class SchedulePortfolio:
+    """Per-mode precomputed GHA schedules, keyed by mode name."""
+
+    schedules: Dict[str, Schedule]
+
+    def get(self, mode: str) -> Optional[Schedule]:
+        return self.schedules.get(mode)
+
+    @classmethod
+    def compile(
+        cls,
+        model: LatencyModel,
+        wf: Workflow,
+        modes: Mapping[str, object],
+        compiler: Optional[GHACompiler] = None,
+        q_ladder: tuple = (0.9, 0.8, 0.7, 0.6, 0.5),
+    ) -> "SchedulePortfolio":
+        """One GHA compile per mode.
+
+        ``modes`` maps mode name to any object exposing
+        ``transform_model(model) -> LatencyModel`` (duck-typed so this
+        module does not depend on the scenarios package; in practice a
+        :class:`repro.scenarios.DrivingMode`).
+
+        Heavy modes may be deadline-infeasible at the compiler's
+        conservative quantile: lax budgets then defeat minimum-quota
+        control at runtime.  Per the paper's quantile guideline (§V-B:
+        relax q under pressure — tail-composition headroom covers the
+        difference), each mode steps down ``q_ladder`` until Phases
+        I/III report no deadline violations, keeping the most
+        conservative *feasible* table per mode.
+        """
+        compiler = compiler or GHACompiler()
+        out: Dict[str, Schedule] = {}
+        for name, mode in modes.items():
+            m_model = mode.transform_model(model)
+            for q in (compiler.q,) + tuple(x for x in q_ladder if x < compiler.q):
+                sched = dataclasses.replace(compiler, q=q).compile(m_model, wf)
+                if (
+                    not sched.meta["phase1_infeasible"]
+                    and not sched.meta["phase3_violations"]
+                ):
+                    break
+            out[name] = sched
+        return cls(out)
+
+
+@dataclasses.dataclass
+class OnlineReplanner:
+    """Reacts to ``mode_change`` by hot-swapping the matching schedule.
+
+    ``resetup`` re-runs ``policy.setup`` after a swap so schedule-derived
+    policy state (e.g. ADS-Tile's downstream slack budgets) follows the
+    new table.  Modes without a portfolio entry keep the current
+    schedule (graceful degradation rather than a hard error — a fleet
+    may meet contexts it never compiled for).
+    """
+
+    portfolio: SchedulePortfolio
+    resetup: bool = True
+    n_swaps: int = 0
+    total_stall_s: float = 0.0
+
+    def on_mode_change(self, sim: "Simulator", mode: str, now: float) -> None:
+        new = self.portfolio.get(mode)
+        if new is None or new is sim.schedule:
+            return
+        self.total_stall_s += sim.hotswap_schedule(new)
+        self.n_swaps += 1
+        if self.resetup:
+            sim.policy.setup(sim)

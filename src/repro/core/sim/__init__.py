@@ -6,12 +6,13 @@ microsecond granularity; reports per-task progress, resource-occupancy
 decomposition (idle / effective / realloc waste) and E2E latency
 distributions under the F1/F2 variation factors.
 """
-from .engine import Job, JobState, Simulator, SimConfig, SimReport
+from .engine import Job, JobState, ModeStats, Simulator, SimConfig, SimReport
 from .policy import Policy
 
 __all__ = [
     "Job",
     "JobState",
+    "ModeStats",
     "Simulator",
     "SimConfig",
     "SimReport",

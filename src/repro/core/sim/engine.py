@@ -41,7 +41,9 @@ from ..latency_model import LatencyModel
 from ..workload import TaskInstance, Workflow, unroll_hyperperiod
 from .policy import Policy
 
-__all__ = ["Job", "JobState", "SimConfig", "Simulator", "SimReport"]
+__all__ = [
+    "Job", "JobState", "ModeStats", "SimConfig", "Simulator", "SimReport",
+]
 
 
 class JobState(enum.Enum):
@@ -82,6 +84,7 @@ class Job:
     finish_t: float = math.nan
     degraded: bool = False          # an upstream job was dropped
     n_resizes: int = 0
+    drop_at_release: bool = False   # scenario sensor dropout window
 
     def duration(self, c: int, tile_flops: float) -> float:
         if self.is_sensor:
@@ -130,6 +133,36 @@ class SimConfig:
     #: wait for the longest in-flight chunk before migration starts.
     #: Off by default (continuous-progress approximation).
     chunk_boundary_realloc: bool = False
+    #: optional ``repro.scenarios.ScenarioScript`` (duck-typed so the
+    #: engine stays independent of the scenarios package): jobs sample
+    #: from the mode active at their release time, segment boundaries
+    #: become ``mode_change`` events, and the report gains per-mode
+    #: accounting.  None reproduces the stationary single-profile run
+    #: bit-for-bit.
+    scenario: Optional[object] = None
+
+
+@dataclasses.dataclass
+class ModeStats:
+    """Per-driving-mode slice of a scenario run.
+
+    Chain completions are attributed to the mode active at their
+    *source sample time*; tile-second accounting is split exactly at
+    ``mode_change`` boundaries (the engine touches every partition when
+    the mode switches).
+    """
+
+    mode: str
+    span_s: float                   # wall time spent in this mode
+    n_completed: int                # chain sink completions
+    n_violations: int
+    p99_s: float                    # E2E p99 over chains in this mode
+    effective_frac: float           # of tiles * span_s
+    realloc_frac: float
+
+    @property
+    def violation_rate(self) -> float:
+        return self.n_violations / self.n_completed if self.n_completed else 0.0
 
 
 @dataclasses.dataclass
@@ -153,6 +186,9 @@ class SimReport:
     chain_p99_s: Dict[str, float]
     chain_latencies: Dict[str, List[float]]
     decision_ratios: List[float]
+    # scenario runs only: per-mode accounting + switch count
+    mode_stats: Dict[str, ModeStats] = dataclasses.field(default_factory=dict)
+    n_mode_switches: int = 0
 
     @property
     def violation_rate(self) -> float:
@@ -185,6 +221,8 @@ class Simulator:
         self.schedule = schedule
         self.policy = policy
         self.cfg = config or SimConfig()
+        if self.cfg.duration_s <= 0:
+            raise ValueError("SimConfig.duration_s must be > 0")
         self.hw: HardwareModel = model.hw
         self.rng = np.random.RandomState(self.cfg.seed)
 
@@ -197,6 +235,14 @@ class Simulator:
             _Partition(idx=p.index, capacity=p.capacity)
             for p in schedule.partitions
         ]
+        # scenario state: active mode + per-mode accounting buckets
+        self._mode_now: Optional[str] = None
+        self._mode_busy: Dict[str, float] = {}
+        self._mode_realloc: Dict[str, float] = {}
+        self._mode_lats: Dict[str, List[float]] = {}
+        # (chain, mode) -> [completions, violations]
+        self._sink_by_mode: Dict[Tuple[str, str], List[int]] = {}
+        self.n_mode_switches = 0
         self._build_jobs()
         # chain accounting: (chain, cycle, sink_idx) -> source release
         self._chain_records: List[Tuple[str, int, int]] = []
@@ -256,12 +302,21 @@ class Simulator:
                 )
                 self._chain_src[(chain.name, k)] = (src_idx, src_rel)
 
+        # non-stationary workloads: jobs sample from the profile of the
+        # driving mode active at their release time
+        scen = self.cfg.scenario
+        mode_profiles = scen.profiles_for(self.model) if scen is not None else None
+
         tile_flops = self.hw.tile_flops
         for cycle in range(n_cycles):
             base = cycle * thp
             for inst in insts:
                 task = wf.tasks[inst.task]
-                prof = self.model.profiles[inst.task]
+                rel_t = base + inst.release_s
+                if mode_profiles is not None:
+                    prof = mode_profiles[scen.mode_at(rel_t)][inst.task]
+                else:
+                    prof = self.model.profiles[inst.task]
                 jid = len(self.jobs)
                 index_of[(inst.task, inst.index)] = jid
                 if task.is_sensor:
@@ -278,6 +333,9 @@ class Simulator:
                         sub_ddl=base + inst.release_s + lat * 2,
                         e2e_ddl=base + inst.release_s + ddl_off[inst.task],
                         plan_dop=0,
+                        drop_at_release=(
+                            scen is not None and scen.dropped(inst.task, rel_t)
+                        ),
                     )
                 else:
                     w = float(
@@ -287,6 +345,8 @@ class Simulator:
                         float(self.rng.exponential(1.0 / prof.io.rate))
                         if prof.io.rate > 0 else 0.0
                     )
+                    if scen is not None:
+                        w *= scen.burst_scale(inst.task, rel_t)
                     plan = self.schedule.plans[inst.task]
                     job = Job(
                         jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
@@ -325,8 +385,16 @@ class Simulator:
             alloc = part.allocated
             if part.stalled:
                 part.realloc_ts += alloc * dt
+                if self._mode_now is not None:
+                    self._mode_realloc[self._mode_now] = (
+                        self._mode_realloc.get(self._mode_now, 0.0) + alloc * dt
+                    )
             else:
                 part.busy_ts += alloc * dt
+                if self._mode_now is not None:
+                    self._mode_busy[self._mode_now] = (
+                        self._mode_busy.get(self._mode_now, 0.0) + alloc * dt
+                    )
         part.last_t = self.now
 
     def _advance_job(self, job: Job) -> None:
@@ -432,13 +500,6 @@ class Simulator:
                 frac = (job.progress * n) % 1.0
                 drain = max(drain, (1.0 - frac) / (n * job.rate))
             stall += drain
-        part.n_realloc += 1
-        part.realloc_bytes += moved
-        mig = stall - self.hw.realloc.decision_s
-        part.decision_ratios.append(
-            self.hw.realloc.decision_s / max(mig, 1e-12)
-        )
-
         # freeze all running jobs (whole-partition stall, §IV-D1)
         for jid in part.running:
             job = self.jobs[jid]
@@ -457,12 +518,99 @@ class Simulator:
             else:
                 part.running[jid] = d
                 job.dop = d
-        part.stalled = True
-        part.stall_end = self.now + stall
+        self._begin_stall(part, moved, stall)
         for jid, d in starts.items():
             self.start_job(self.jobs[jid], d)
-        self._push(part.stall_end, "resume", (partition,))
         return stall
+
+    def _begin_stall(self, part: _Partition, moved: float, stall: float) -> None:
+        """Charge one stop-migrate-restart stall on ``part`` — shared by
+        DoP resizes and schedule hot-swaps so both reallocation paths
+        account identically (events, bytes, decision/migration ratio,
+        resume arming)."""
+        part.n_realloc += 1
+        part.realloc_bytes += moved
+        # decision/migration split: clamp migration time to >= 0 and skip
+        # degenerate samples (tiny migrations would otherwise produce
+        # nonsense ratios)
+        mig = max(stall - self.hw.realloc.decision_s, 0.0)
+        if mig > 1e-12:
+            part.decision_ratios.append(self.hw.realloc.decision_s / mig)
+        part.stalled = True
+        part.stall_end = max(part.stall_end, self.now + stall)
+        self._push(part.stall_end, "resume", (part.idx,))
+
+    def hotswap_schedule(self, new: Schedule) -> float:
+        """Online replanning: swap the active scheduling table (the
+        ``mode_change`` reaction of the runtime, §IV-C applied across
+        contexts).
+
+        Running jobs keep their tiles; if a partition's capacity shrank
+        below its current allocation, running jobs are preempted back to
+        the ready queue (largest allocation first) until it fits, and
+        their checkpoints count as migration volume.  Every partition
+        pays a stop-migrate-restart stall through the same bounded
+        reallocation cost model as a DoP resize, so hot-swap cost lands
+        in ``realloc_frac`` honestly.  PENDING/READY jobs are retargeted
+        to the new plans (partition, ERT, sub-deadline, plan DoP).
+
+        Returns the summed stall time across partitions.
+        """
+        if len(new.partitions) != len(self.parts):
+            raise ValueError(
+                "hot-swap requires a schedule with the same partition count"
+            )
+        total_stall = 0.0
+        for part in self.parts:
+            new_cap = new.partitions[part.idx].capacity
+            self._touch(part)
+            moved = 0.0
+            if part.allocated > new_cap:
+                victims = sorted(part.running, key=lambda j: (part.running[j], j))
+                while part.allocated > new_cap and victims:
+                    jid = victims.pop()  # largest allocation first
+                    job = self.jobs[jid]
+                    moved += (
+                        self.wf.tasks[job.task].checkpoint_bytes
+                        * part.running[jid]
+                    )
+                    self._advance_job(job)
+                    del part.running[jid]
+                    job.rate = 0.0
+                    job.gen += 1
+                    job.dop = 0
+                    job.n_resizes += 1
+                    job.state = JobState.READY
+                    self._ready_sets[part.idx].add(job)
+            part.capacity = new_cap
+            stall = self.hw.realloc_latency(moved, max(new_cap, 1))
+            # freeze whatever keeps running for the swap stall (§IV-D1)
+            for jid in part.running:
+                frozen = self.jobs[jid]
+                self._advance_job(frozen)
+                frozen.rate = 0.0
+                frozen.gen += 1
+            self._begin_stall(part, moved, stall)
+            total_stall += stall
+
+        # retarget future jobs to the new plans
+        for job in self.jobs:
+            if job.is_sensor or job.state not in (JobState.PENDING, JobState.READY):
+                continue
+            plan = new.plans.get(job.task)
+            if plan is None:
+                continue
+            if job.state == JobState.READY and plan.partition != job.partition:
+                self._ready_sets[job.partition].discard(job)
+                self._ready_sets[plan.partition].add(job)
+            job.partition = plan.partition
+            job.ert = job.release + plan.ert_s
+            job.sub_ddl = job.release + plan.subdeadline_s
+            job.plan_dop = plan.dop
+            if job.state == JobState.READY and job.ert > self.now:
+                self._push(job.ert, "ert", (job.jid,))
+        self.schedule = new
+        return total_stall
 
     def preempt(self, job: Job) -> None:
         """Remove a running job from its tiles back to the ready queue
@@ -491,9 +639,11 @@ class Simulator:
         job.finish_t = self.now
         job.rate = 0.0
         job.gen += 1
-        # account dropped processing power (remaining work at plan DoP)
-        rem = job.remaining(max(job.plan_dop, 1), self.hw.tile_flops)
-        self.dropped_work_ts += rem * max(job.plan_dop, 1)
+        # account dropped processing power (remaining work at plan DoP);
+        # sensors run on the SPE, not on tiles, so they carry none
+        if not job.is_sensor:
+            rem = job.remaining(max(job.plan_dop, 1), self.hw.tile_flops)
+            self.dropped_work_ts += rem * max(job.plan_dop, 1)
         self._propagate(job)
         self._record_dropped_sink(job)
         self.policy.on_point(self, job.partition, self.now, "drop", job)
@@ -541,11 +691,20 @@ class Simulator:
             _, src_rel = src
             t0 = job.cycle * self.wf.hyper_period_s + src_rel
             lat = self.now - t0
+            violated = lat > chain.deadline_s + 1e-12 or job.degraded
             self.chain_count[chain.name] += 1
             if self.cfg.collect_latencies:
                 self.chain_latencies[chain.name].append(lat)
-            if lat > chain.deadline_s + 1e-12 or job.degraded:
+            if violated:
                 self.chain_violations[chain.name] += 1
+            if self.cfg.scenario is not None:
+                # attribute to the mode active at the source sample time
+                m = self.cfg.scenario.mode_at(t0)
+                rec = self._sink_by_mode.setdefault((chain.name, m), [0, 0])
+                rec[0] += 1
+                rec[1] += int(violated)
+                if self.cfg.collect_latencies:
+                    self._mode_lats.setdefault(m, []).append(lat)
 
     def _record_dropped_sink(self, job: Job) -> None:
         for chain in self.wf.chain_for(job.task):
@@ -553,6 +712,16 @@ class Simulator:
                 continue
             self.chain_count[chain.name] += 1
             self.chain_violations[chain.name] += 1
+            if self.cfg.scenario is not None:
+                src = self._chain_src.get((chain.name, job.idx))
+                t0 = (
+                    job.cycle * self.wf.hyper_period_s + src[1]
+                    if src is not None else job.release
+                )
+                m = self.cfg.scenario.mode_at(t0)
+                rec = self._sink_by_mode.setdefault((chain.name, m), [0, 0])
+                rec[0] += 1
+                rec[1] += 1
 
     # ------------------------------------------------------------------
     # main loop
@@ -566,6 +735,17 @@ class Simulator:
             if job.is_sensor:
                 self._push(job.release, "sensor", (job.jid,))
 
+        # seed mode-switch events from the scenario timeline (adjacent
+        # equal-mode segments are one context: no event, no switch)
+        scen = self.cfg.scenario
+        if scen is not None:
+            self._mode_now = scen.mode_at(0.0)
+            prev = self._mode_now
+            for t, mode in scen.boundaries()[1:]:
+                if mode != prev and t < self.cfg.duration_s:
+                    self._push(t, "mode_change", (mode,))
+                prev = mode
+
         end_t = self.cfg.duration_s
         while self._heap:
             t, _, kind, payload = heapq.heappop(self._heap)
@@ -575,6 +755,11 @@ class Simulator:
 
             if kind == "sensor":
                 job = self.jobs[payload[0]]
+                if job.drop_at_release:
+                    # scenario dropout: the frame never arrives;
+                    # downstream jobs run degraded
+                    self.terminate(job, "sensor_dropout")
+                    continue
                 job.state = JobState.RUNNING
                 job.start_t = self.now
                 self._push(self.now + job.io_s, "sensor_done", (job.jid,))
@@ -611,6 +796,8 @@ class Simulator:
                 self.policy.on_point(self, job.partition, self.now, "chunk", job)
             elif kind == "resume":
                 part = self.parts[payload[0]]
+                if part.stall_end > t + 1e-12:
+                    continue  # superseded by a longer stall (hot-swap)
                 self._touch(part)
                 part.stalled = False
                 for jid in list(part.running):
@@ -624,6 +811,14 @@ class Simulator:
                 if job is not None and job.state in (JobState.DONE, JobState.DROPPED):
                     continue
                 self.policy.on_point(self, pid, self.now, "timer", job)
+            elif kind == "mode_change":
+                mode = payload[0]
+                # split tile-second accounting exactly at the boundary
+                for part in self.parts:
+                    self._touch(part)
+                self._mode_now = mode
+                self.n_mode_switches += 1
+                self.policy.on_mode_change(self, mode, self.now)
 
         # drain accounting to end time
         self.now = end_t
@@ -658,23 +853,90 @@ class Simulator:
         # chains whose sink never completed within the horizon count as
         # violations (starvation must not look like success)
         thp = self.wf.hyper_period_s
+        scen = self.cfg.scenario
         for chain in self.wf.chains:
             expected = 0
+            exp_mode: Dict[str, int] = {}
             for (cname, _k), (_si, src_rel) in self._chain_src.items():
                 if cname != chain.name:
                     continue
                 for cycle in range(self.n_cycles):
-                    if cycle * thp + src_rel + chain.deadline_s <= self.cfg.duration_s:
+                    t0 = cycle * thp + src_rel
+                    if t0 + chain.deadline_s <= self.cfg.duration_s:
                         expected += 1
+                        if scen is not None:
+                            m = scen.mode_at(t0)
+                            exp_mode[m] = exp_mode.get(m, 0) + 1
             have = self.chain_count[chain.name]
-            if expected > have:
-                self.chain_violations[chain.name] += expected - have
+            deficit = max(0, expected - have)
+            if deficit:
+                self.chain_violations[chain.name] += deficit
                 self.chain_count[chain.name] = expected
+            # mirror per (chain, mode): attribute exactly the chain's
+            # global deficit to modes with missing sinks (chronological
+            # order), so per-mode totals always reconcile with the
+            # global counters — a mode's shortfall can be offset by
+            # bonus completions (deadline beyond the horizon) elsewhere
+            if scen is not None and deficit:
+                for m in scen.modes():
+                    if m not in exp_mode:
+                        continue
+                    rec = self._sink_by_mode.setdefault((chain.name, m), [0, 0])
+                    take = min(max(0, exp_mode[m] - rec[0]), deficit)
+                    if take:
+                        rec[0] += take
+                        rec[1] += take
+                        deficit -= take
+                    if not deficit:
+                        break
 
         p99 = {}
         for ch, lats in self.chain_latencies.items():
             p99[ch] = float(np.percentile(lats, 99)) if lats else float("nan")
         ratios = [r for p in self.parts for r in p.decision_ratios]
+
+        # per-mode report slices
+        mode_stats: Dict[str, ModeStats] = {}
+        if scen is not None:
+            bounds = scen.boundaries()
+            ends = [t for t, _m in bounds[1:]]
+            # a run longer than the script stays in the final mode, so
+            # the last segment's end is the horizon itself
+            ends.append(max(self.cfg.duration_s, bounds[-1][0]))
+            spans: Dict[str, float] = {}
+            for (t0, m), t1 in zip(bounds, ends):
+                spans[m] = spans.get(m, 0.0) + max(
+                    0.0,
+                    min(t1, self.cfg.duration_s) - min(t0, self.cfg.duration_s),
+                )
+            for m, span in spans.items():
+                done = sum(
+                    rec[0] for (_c, mm), rec in self._sink_by_mode.items()
+                    if mm == m
+                )
+                viol = sum(
+                    rec[1] for (_c, mm), rec in self._sink_by_mode.items()
+                    if mm == m
+                )
+                lats = self._mode_lats.get(m, [])
+                denom = self.hw.num_tiles * span
+                mode_stats[m] = ModeStats(
+                    mode=m,
+                    span_s=span,
+                    n_completed=done,
+                    n_violations=viol,
+                    p99_s=(
+                        float(np.percentile(np.asarray(lats), 99))
+                        if lats else float("nan")
+                    ),
+                    effective_frac=(
+                        self._mode_busy.get(m, 0.0) / denom if denom > 0 else 0.0
+                    ),
+                    realloc_frac=(
+                        self._mode_realloc.get(m, 0.0) / denom if denom > 0 else 0.0
+                    ),
+                )
+
         return SimReport(
             duration_s=self.cfg.duration_s,
             total_tiles=self.hw.num_tiles,
@@ -692,4 +954,6 @@ class Simulator:
             chain_p99_s=p99,
             chain_latencies=dict(self.chain_latencies),
             decision_ratios=ratios,
+            mode_stats=mode_stats,
+            n_mode_switches=self.n_mode_switches,
         )

@@ -20,9 +20,20 @@ class Policy:
     ``core/runtime``."""
 
     name: str = "base"
+    #: optional online replanner (``core.runtime.replan.OnlineReplanner``);
+    #: attach one to make the policy react to driving-mode switches
+    replanner: Optional[object] = None
 
     def setup(self, sim: "Simulator") -> None:
         """Called once before the clock starts."""
+
+    def on_mode_change(self, sim: "Simulator", mode: str, now: float) -> None:
+        """Called when the scenario's driving mode switches (the engine
+        fires this for every ``mode_change`` event).  The default
+        delegates to the attached :attr:`replanner`, if any — pinned
+        policies simply keep their offline schedule."""
+        if self.replanner is not None:
+            self.replanner.on_mode_change(sim, mode, now)
 
     def on_point(
         self,

@@ -1,0 +1,62 @@
+"""Driving-scenario subsystem: non-stationary, scriptable workloads.
+
+The paper's premise — DNN execution time varies up to 3.3x with the
+driving context — only matters if the workload actually *changes*
+during a run.  This package makes it change:
+
+* :mod:`~repro.scenarios.modes` — a registry of driving modes (urban,
+  highway, parking, adverse weather, night), each a transform over the
+  per-task latency profiles;
+* :mod:`~repro.scenarios.script` — a scenario timeline DSL (ordered
+  mode segments, transient bursts, sensor dropouts) plus a
+  Markov-chain scenario generator;
+* :mod:`~repro.scenarios.runner` — one-call scenario experiments and
+  multiprocessing Monte-Carlo sweeps.
+
+The engine reacts through ``mode_change`` events and, when a policy
+carries an :class:`~repro.core.runtime.OnlineReplanner`, hot-swaps
+per-mode GHA schedules through the bounded-reallocation path.
+"""
+from .modes import MODES, DrivingMode, get_mode, mode_names, register_mode
+from .script import (
+    BUNDLED_SCENARIOS,
+    Burst,
+    MarkovScenarioGenerator,
+    ModeSegment,
+    ScenarioScript,
+    SensorDropout,
+    default_generator,
+    get_scenario,
+)
+from .runner import (
+    ScenarioSpec,
+    aggregate_sweep,
+    compile_portfolio,
+    parallel_map,
+    run_scenario,
+    summarize,
+    sweep,
+)
+
+__all__ = [
+    "MODES",
+    "DrivingMode",
+    "get_mode",
+    "mode_names",
+    "register_mode",
+    "BUNDLED_SCENARIOS",
+    "Burst",
+    "MarkovScenarioGenerator",
+    "ModeSegment",
+    "ScenarioScript",
+    "SensorDropout",
+    "default_generator",
+    "get_scenario",
+    "ScenarioSpec",
+    "aggregate_sweep",
+    "compile_portfolio",
+    "parallel_map",
+    "run_scenario",
+    "summarize",
+    "sweep",
+]

@@ -1,0 +1,247 @@
+"""Scenario experiment runner + multiprocessing Monte-Carlo sweeps.
+
+``run_scenario`` is the one-call entry point for a single drive: build
+the benchmark workflow, compile the GHA schedule for the scenario's
+*initial* mode, optionally precompile a per-mode schedule portfolio for
+online replanning, and run Tile-stream with the scenario attached.
+
+``sweep`` is the fleet-scale view: ``N`` Markov-sampled scenarios x
+policies, fanned out over a process pool with deterministic
+per-scenario seeds, aggregated into per-policy and per-mode tables.
+The pool utility :func:`parallel_map` is generic (the benchmark harness
+reuses it for ``--jobs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import multiprocessing
+import os
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from ..core.experiment import ExperimentSpec, build_stack, make_policy
+from ..core.runtime import OnlineReplanner, SchedulePortfolio
+from ..core.sim import SimConfig, Simulator, SimReport
+from .modes import get_mode
+from .script import MarkovScenarioGenerator, ScenarioScript, default_generator
+
+__all__ = [
+    "ScenarioSpec",
+    "compile_portfolio",
+    "run_scenario",
+    "parallel_map",
+    "sweep",
+    "aggregate_sweep",
+]
+
+
+@dataclasses.dataclass
+class ScenarioSpec(ExperimentSpec):
+    """One scenario run (picklable, so sweeps can ship it to workers).
+
+    Extends :class:`~repro.core.experiment.ExperimentSpec` — the
+    workload fields (tiles, replicas, deadlines, ...) live there — with
+    the scenario script, the replanning switch, and a scenario-length
+    default horizon.
+    """
+
+    scenario: Optional[ScenarioScript] = None   # required (kw-only in use)
+    replan: bool = True
+    duration_s: Optional[float] = None          # None = the scenario's length
+    #: precompiled per-mode schedules; None compiles one per run.
+    #: sweep() fills this so N scenarios share one portfolio per policy
+    #: instead of recompiling identical GHA tables in every worker.
+    portfolio: Optional[SchedulePortfolio] = None
+
+    def __post_init__(self) -> None:
+        if self.scenario is None:
+            raise ValueError("ScenarioSpec requires a scenario script")
+
+
+def compile_portfolio(
+    spec: ScenarioSpec, modes: Optional[Sequence[str]] = None
+) -> SchedulePortfolio:
+    """Compile the per-mode schedule portfolio for ``spec``'s workload
+    (``modes`` defaults to the scenario's own mode set)."""
+    wf, _hw, model, compiler = build_stack(spec)
+    wanted = tuple(modes) if modes is not None else spec.scenario.modes()
+    return SchedulePortfolio.compile(
+        model, wf, {m: get_mode(m) for m in wanted}, compiler,
+    )
+
+
+def run_scenario(spec: ScenarioSpec) -> SimReport:
+    """Run one scenario end-to-end and return its :class:`SimReport`."""
+    scen = spec.scenario
+    wf, _hw, model, compiler = build_stack(spec)
+
+    # the offline table is compiled for the scenario's *initial* mode
+    # (via the portfolio's q-relaxation ladder, so pinned and replanned
+    # runs start from the identical table) — a pinned run then keeps it
+    # for the whole drive
+    initial_mode = scen.segments[0].mode
+    portfolio = spec.portfolio
+    if portfolio is None:
+        wanted = scen.modes() if spec.replan else (initial_mode,)
+        portfolio = SchedulePortfolio.compile(
+            model, wf, {m: get_mode(m) for m in wanted}, compiler,
+        )
+    sched = portfolio.schedules[initial_mode]
+
+    policy = make_policy(spec.policy)
+    if spec.replan:
+        policy.replanner = OnlineReplanner(portfolio)
+
+    sim = Simulator(
+        wf, model, sched, policy,
+        SimConfig(
+            duration_s=(
+                scen.duration_s if spec.duration_s is None else spec.duration_s
+            ),
+            seed=spec.seed,
+            drop_policy=spec.drop_policy,
+            scenario=scen,
+        ),
+    )
+    return sim.run()
+
+
+# ---------------------------------------------------------------------------
+# process-pool utility (reused by benchmarks/run.py --jobs)
+# ---------------------------------------------------------------------------
+def parallel_map(
+    fn: Callable, items: Sequence, jobs: Optional[int] = None
+) -> List:
+    """``[fn(x) for x in items]``, fanned out over ``jobs`` processes.
+
+    Order is preserved.  ``jobs`` <= 1 (or a single item) degrades to a
+    plain in-process loop; ``jobs=None`` uses the CPU count capped at
+    the number of items.  Uses the ``spawn`` start method — fork after
+    JAX initialisation is unsafe — so ``fn`` and every item must be
+    picklable (module-level functions and frozen dataclasses are).
+    """
+    if jobs is None:
+        jobs = os.cpu_count() or 1
+    jobs = min(jobs, len(items))
+    if multiprocessing.current_process().daemon:
+        # already inside a pool worker (e.g. a sweep launched by
+        # ``benchmarks.run --jobs``): daemonic processes cannot spawn
+        # children, so degrade to the in-process loop
+        jobs = 1
+    if jobs <= 1 or len(items) <= 1:
+        return [fn(x) for x in items]
+    ctx = multiprocessing.get_context("spawn")
+    with ctx.Pool(processes=jobs) as pool:
+        return pool.map(fn, items)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo sweeps
+# ---------------------------------------------------------------------------
+def summarize(spec: ScenarioSpec, report: SimReport) -> Dict[str, object]:
+    """Flatten one run into a picklable summary row."""
+    return {
+        "scenario": spec.scenario.name,
+        "script": spec.scenario.to_string(),
+        "policy": spec.policy,
+        "replan": spec.replan,
+        "seed": spec.seed,
+        "violation_rate": report.violation_rate,
+        "task_miss_rate": report.task_miss_rate,
+        "effective_frac": report.effective_frac,
+        "realloc_frac": report.realloc_frac,
+        "n_realloc": report.n_realloc,
+        "n_mode_switches": report.n_mode_switches,
+        "per_mode": {
+            m: {
+                "span_s": s.span_s,
+                "violation_rate": s.violation_rate,
+                # None rather than NaN: NaN breaks row equality and JSON
+                "p99_s": None if math.isnan(s.p99_s) else s.p99_s,
+                "effective_frac": s.effective_frac,
+                "realloc_frac": s.realloc_frac,
+            }
+            for m, s in report.mode_stats.items()
+        },
+    }
+
+
+def _run_one(spec: ScenarioSpec) -> Dict[str, object]:
+    return summarize(spec, run_scenario(spec))
+
+
+def sweep(
+    n_scenarios: int,
+    policies: Sequence[str] = ("ads_tile", "tp_driven"),
+    duration_s: float = 2.0,
+    seed: int = 0,
+    jobs: Optional[int] = None,
+    generator: Optional[MarkovScenarioGenerator] = None,
+    replan: bool = True,
+    **spec_kw,
+) -> List[Dict[str, object]]:
+    """Monte-Carlo sweep: ``n_scenarios`` Markov drives x ``policies``.
+
+    Scenario ``i`` is sampled with the deterministic seed
+    ``seed * 100003 + i`` and simulated with the same seed for every
+    policy, so policy comparisons are paired and the whole sweep is
+    reproducible from ``seed`` alone.
+    """
+    gen = generator or default_generator()
+    all_modes = sorted(gen.transitions)
+    specs: List[ScenarioSpec] = []
+    portfolios: Dict[str, SchedulePortfolio] = {}
+    for i in range(n_scenarios):
+        s_i = seed * 100003 + i
+        script = gen.sample(duration_s, seed=s_i)
+        for pol in policies:
+            spec = ScenarioSpec(
+                scenario=script, policy=pol, replan=replan, seed=s_i,
+                **spec_kw,
+            )
+            # one portfolio per policy, covering every mode the
+            # generator can emit — compiled here once instead of per
+            # worker run
+            if pol not in portfolios:
+                portfolios[pol] = compile_portfolio(spec, all_modes)
+            specs.append(dataclasses.replace(spec, portfolio=portfolios[pol]))
+    return parallel_map(_run_one, specs, jobs)
+
+
+def aggregate_sweep(
+    rows: Sequence[Mapping[str, object]],
+) -> Dict[str, Dict[str, object]]:
+    """Aggregate sweep rows into per-policy means (and per-mode means).
+
+    Returns ``{policy: {n, violation_rate, task_miss_rate,
+    realloc_frac, per_mode: {mode: {...}}}}``.
+    """
+    out: Dict[str, Dict[str, object]] = {}
+    by_pol: Dict[str, List[Mapping[str, object]]] = {}
+    for r in rows:
+        by_pol.setdefault(str(r["policy"]), []).append(r)
+    for pol, rs in sorted(by_pol.items()):
+        per_mode: Dict[str, Dict[str, List[float]]] = {}
+        for r in rs:
+            for m, st in r["per_mode"].items():  # type: ignore[union-attr]
+                bucket = per_mode.setdefault(
+                    m, {"violation_rate": [], "p99_s": [], "realloc_frac": []}
+                )
+                bucket["violation_rate"].append(st["violation_rate"])
+                if st["p99_s"] is not None:
+                    bucket["p99_s"].append(st["p99_s"])
+                bucket["realloc_frac"].append(st["realloc_frac"])
+        out[pol] = {
+            "n": len(rs),
+            "violation_rate": float(np.mean([r["violation_rate"] for r in rs])),
+            "task_miss_rate": float(np.mean([r["task_miss_rate"] for r in rs])),
+            "realloc_frac": float(np.mean([r["realloc_frac"] for r in rs])),
+            "per_mode": {
+                m: {k: float(np.mean(v)) if v else float("nan")
+                    for k, v in b.items()}
+                for m, b in sorted(per_mode.items())
+            },
+        }
+    return out

@@ -1,0 +1,311 @@
+"""Scenario timeline DSL + Markov-chain scenario generator.
+
+A :class:`ScenarioScript` is a deterministic timeline of driving-mode
+segments plus two kinds of transients:
+
+* :class:`Burst` — a time window during which sampled workloads are
+  scaled on top of the active mode (a traffic wave, a construction
+  zone);
+* :class:`SensorDropout` — a window during which one sensor produces no
+  frames (occlusion, glare, a transport hiccup); downstream jobs run
+  degraded exactly as the engine already models dropped predecessors.
+
+Scripts are pure data (hashable, picklable) so a Monte-Carlo sweep can
+ship them to worker processes, and the compact text form
+``"urban:0.5 highway:1.0 urban:0.5"`` round-trips via :meth:`parse`.
+
+:class:`MarkovScenarioGenerator` samples random scripts from a
+mode-transition matrix with per-mode dwell times — the fleet-scale view
+where each scenario is one drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.latency_model import LatencyModel, TaskLatencyProfile
+from .modes import get_mode
+
+__all__ = [
+    "ModeSegment",
+    "Burst",
+    "SensorDropout",
+    "ScenarioScript",
+    "MarkovScenarioGenerator",
+    "default_generator",
+    "BUNDLED_SCENARIOS",
+    "get_scenario",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeSegment:
+    mode: str
+    duration_s: float
+
+    def __post_init__(self) -> None:
+        if self.duration_s <= 0:
+            raise ValueError(f"segment {self.mode}: non-positive duration")
+
+
+@dataclasses.dataclass(frozen=True)
+class Burst:
+    """Transient workload spike on top of the active mode."""
+
+    start_s: float
+    duration_s: float
+    work_scale: float = 1.5
+    tasks: Tuple[str, ...] = ()   # empty = every DNN task
+
+    def active(self, task: str, t: float) -> bool:
+        if not (self.start_s <= t < self.start_s + self.duration_s):
+            return False
+        return not self.tasks or task.split("#")[0] in self.tasks
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorDropout:
+    """Window during which one sensor produces no frames."""
+
+    sensor: str
+    start_s: float
+    duration_s: float
+
+    def active(self, sensor: str, t: float) -> bool:
+        return (
+            sensor == self.sensor
+            and self.start_s <= t < self.start_s + self.duration_s
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioScript:
+    """An ordered timeline of mode segments with optional transients."""
+
+    name: str
+    segments: Tuple[ModeSegment, ...]
+    bursts: Tuple[Burst, ...] = ()
+    dropouts: Tuple[SensorDropout, ...] = ()
+
+    def __post_init__(self) -> None:
+        if not self.segments:
+            raise ValueError("scenario needs at least one mode segment")
+        for seg in self.segments:
+            get_mode(seg.mode)  # fail fast on unknown modes
+
+    # -- timeline queries -------------------------------------------------
+    @property
+    def duration_s(self) -> float:
+        return sum(s.duration_s for s in self.segments)
+
+    def modes(self) -> Tuple[str, ...]:
+        """Distinct modes in order of first appearance."""
+        seen: List[str] = []
+        for s in self.segments:
+            if s.mode not in seen:
+                seen.append(s.mode)
+        return tuple(seen)
+
+    def boundaries(self) -> List[Tuple[float, str]]:
+        """``(start_time, mode)`` per segment; first entry is at t=0."""
+        out, t = [], 0.0
+        for s in self.segments:
+            out.append((t, s.mode))
+            t += s.duration_s
+        return out
+
+    def mode_at(self, t: float) -> str:
+        """Active mode at time ``t`` (clamped to the last segment)."""
+        acc = 0.0
+        for s in self.segments:
+            acc += s.duration_s
+            if t < acc:
+                return s.mode
+        return self.segments[-1].mode
+
+    def burst_scale(self, task: str, t: float) -> float:
+        scale = 1.0
+        for b in self.bursts:
+            if b.active(task, t):
+                scale *= b.work_scale
+        return scale
+
+    def dropped(self, sensor: str, t: float) -> bool:
+        return any(d.active(sensor, t) for d in self.dropouts)
+
+    def profiles_for(
+        self, model: LatencyModel
+    ) -> Dict[str, Dict[str, TaskLatencyProfile]]:
+        """Per-mode transformed profile tables (consumed by the engine's
+        job builder)."""
+        return {
+            m: {
+                n: get_mode(m).transform_profile(p)
+                for n, p in model.profiles.items()
+            }
+            for m in self.modes()
+        }
+
+    # -- compact text form ------------------------------------------------
+    def to_string(self) -> str:
+        return " ".join(f"{s.mode}:{s.duration_s:g}" for s in self.segments)
+
+    @classmethod
+    def parse(cls, text: str, name: str = "parsed") -> "ScenarioScript":
+        """Parse ``"urban:0.5 highway:1.0"`` (commas also accepted)."""
+        segs = []
+        for tok in text.replace(",", " ").split():
+            mode, _, dur = tok.partition(":")
+            if not dur:
+                raise ValueError(f"bad segment {tok!r}: want mode:seconds")
+            segs.append(ModeSegment(mode, float(dur)))
+        return cls(name=name, segments=tuple(segs))
+
+
+# ---------------------------------------------------------------------------
+# Markov-chain scenario generation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MarkovScenarioGenerator:
+    """Samples random :class:`ScenarioScript`s from a mode-transition
+    matrix.
+
+    Dwell time in mode ``m`` is ``mean_dwell_s[m] * U(0.5, 1.5)``
+    (bounded, so every sampled scenario exercises several switches);
+    with probability ``burst_prob`` a segment carries a workload burst,
+    and with ``dropout_prob`` a sensor dropout.  Sampling is fully
+    determined by ``seed``.
+    """
+
+    transitions: Mapping[str, Mapping[str, float]]
+    mean_dwell_s: Mapping[str, float]
+    initial: Optional[str] = None          # None = uniform over states
+    burst_prob: float = 0.15
+    dropout_prob: float = 0.05
+    dropout_sensors: Tuple[str, ...] = ("cam_multi", "lidar")
+
+    def sample(self, duration_s: float, seed: int) -> ScenarioScript:
+        rng = np.random.RandomState(seed)
+        states = sorted(self.transitions)
+        mode = self.initial or states[rng.randint(len(states))]
+        segs: List[ModeSegment] = []
+        bursts: List[Burst] = []
+        drops: List[SensorDropout] = []
+        t = 0.0
+        while t < duration_s - 1e-9:
+            dwell = float(self.mean_dwell_s[mode]) * float(rng.uniform(0.5, 1.5))
+            dwell = min(dwell, duration_s - t)
+            segs.append(ModeSegment(mode, dwell))
+            if rng.uniform() < self.burst_prob and dwell > 0.1:
+                start = t + float(rng.uniform(0.0, dwell * 0.5))
+                bursts.append(Burst(
+                    start_s=start,
+                    duration_s=float(rng.uniform(0.05, dwell * 0.5)),
+                    work_scale=float(rng.uniform(1.3, 2.0)),
+                ))
+            if rng.uniform() < self.dropout_prob and dwell > 0.1:
+                sensor = self.dropout_sensors[
+                    rng.randint(len(self.dropout_sensors))
+                ]
+                start = t + float(rng.uniform(0.0, dwell * 0.5))
+                drops.append(SensorDropout(
+                    sensor=sensor,
+                    start_s=start,
+                    duration_s=float(rng.uniform(0.05, 0.2)),
+                ))
+            t += dwell
+            nxt = self.transitions[mode]
+            names = sorted(nxt)
+            probs = np.asarray([nxt[n] for n in names], dtype=float)
+            probs /= probs.sum()
+            mode = names[int(rng.choice(len(names), p=probs))]
+        # self-transitions extend the dwell rather than splitting the
+        # timeline into equal-mode segments
+        merged: List[ModeSegment] = []
+        for seg in segs:
+            if merged and merged[-1].mode == seg.mode:
+                merged[-1] = ModeSegment(
+                    seg.mode, merged[-1].duration_s + seg.duration_s
+                )
+            else:
+                merged.append(seg)
+        return ScenarioScript(
+            name=f"markov-{seed}",
+            segments=tuple(merged),
+            bursts=tuple(bursts),
+            dropouts=tuple(drops),
+        )
+
+
+#: plausible drive structure: urban is the hub; weather strikes from
+#: urban/highway and clears back; parking only borders urban.
+DEFAULT_TRANSITIONS: Dict[str, Dict[str, float]] = {
+    "urban": {"highway": 0.35, "parking": 0.15, "adverse_weather": 0.15,
+              "night": 0.10, "urban": 0.25},
+    "highway": {"urban": 0.45, "adverse_weather": 0.15, "night": 0.10,
+                "highway": 0.30},
+    "parking": {"urban": 0.90, "parking": 0.10},
+    "adverse_weather": {"urban": 0.50, "highway": 0.30,
+                        "adverse_weather": 0.20},
+    "night": {"urban": 0.40, "highway": 0.40, "night": 0.20},
+}
+
+DEFAULT_DWELL_S: Dict[str, float] = {
+    "urban": 0.8, "highway": 1.0, "parking": 0.5,
+    "adverse_weather": 0.7, "night": 0.9,
+}
+
+
+def default_generator(**overrides) -> MarkovScenarioGenerator:
+    kw = dict(transitions=DEFAULT_TRANSITIONS, mean_dwell_s=DEFAULT_DWELL_S)
+    kw.update(overrides)
+    return MarkovScenarioGenerator(**kw)
+
+
+# ---------------------------------------------------------------------------
+# bundled named scenarios (used by tests, benchmarks and the demo)
+# ---------------------------------------------------------------------------
+BUNDLED_SCENARIOS: Dict[str, ScenarioScript] = {
+    # leave the garage into rush-hour traffic, then a downpour: the
+    # parking-mode schedule is badly undersized for what follows, which
+    # is exactly the case online replanning exists for
+    "calm_to_rush": ScenarioScript(
+        name="calm_to_rush",
+        segments=(
+            ModeSegment("parking", 0.4),
+            ModeSegment("urban", 0.8),
+            ModeSegment("adverse_weather", 0.8),
+        ),
+    ),
+    # a commute: city -> highway -> city with a mid-drive traffic wave
+    "commute": ScenarioScript(
+        name="commute",
+        segments=(
+            ModeSegment("urban", 0.6),
+            ModeSegment("highway", 0.8),
+            ModeSegment("urban", 0.6),
+        ),
+        bursts=(Burst(start_s=1.6, duration_s=0.2, work_scale=1.6),),
+    ),
+    # night highway run hitting a storm with a brief camera dropout
+    "night_storm": ScenarioScript(
+        name="night_storm",
+        segments=(
+            ModeSegment("night", 0.6),
+            ModeSegment("adverse_weather", 0.8),
+            ModeSegment("highway", 0.6),
+        ),
+        dropouts=(SensorDropout("cam_multi", 0.8, 0.15),),
+    ),
+}
+
+
+def get_scenario(name: str) -> ScenarioScript:
+    try:
+        return BUNDLED_SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r} (bundled: {sorted(BUNDLED_SCENARIOS)})"
+        ) from None

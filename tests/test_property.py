@@ -3,7 +3,10 @@ import math
 
 import jax
 import numpy as np
-from hypothesis import HealthCheck, given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.analysis.hlo import collective_bytes, parse_hlo_collectives
 from repro.core.gha.guillotine import guillotine_cut

@@ -1,0 +1,239 @@
+"""Driving-scenario subsystem tests: modes, scripts, engine integration,
+online replanning, Monte-Carlo sweeps."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.latency_model import LatencyModel
+from repro.core.benchmark import make_ads_benchmark
+from repro.core.hardware import simba_chip
+from repro.scenarios import (
+    BUNDLED_SCENARIOS,
+    Burst,
+    ModeSegment,
+    ScenarioScript,
+    ScenarioSpec,
+    SensorDropout,
+    aggregate_sweep,
+    default_generator,
+    get_mode,
+    run_scenario,
+    sweep,
+)
+
+
+# ---------------------------------------------------------------------------
+# modes
+# ---------------------------------------------------------------------------
+def test_mode_transform_scales_profiles():
+    wf = make_ads_benchmark()
+    model = LatencyModel.from_workflow(wf, simba_chip(400))
+    mode = get_mode("adverse_weather")
+    prof = model.profiles["img_backbone"]
+    tp = mode.transform_profile(prof)
+    assert np.isclose(tp.work.mean, prof.work.mean * mode.work_scale)
+    assert tp.work.p99_ratio > prof.work.p99_ratio      # widened tail
+    assert tp.io.rate < prof.io.rate                     # heavier queueing
+    sensor = mode.transform_profile(model.profiles["cam_multi"])
+    assert np.isclose(
+        sensor.sensor_latency.mean,
+        model.profiles["cam_multi"].sensor_latency.mean
+        * mode.sensor_latency_scale,
+    )
+
+
+def test_mode_task_overrides_apply_to_replicas():
+    mode = get_mode("urban")
+    # cockpit replica names inherit the base task's override
+    assert mode._task_scale("traj_pred#r3") == mode._task_scale("traj_pred")
+    assert mode._task_scale("traj_pred") > mode.work_scale
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(KeyError):
+        get_mode("wormhole")
+    with pytest.raises(KeyError):
+        ScenarioScript(name="x", segments=(ModeSegment("wormhole", 1.0),))
+
+
+# ---------------------------------------------------------------------------
+# scripts
+# ---------------------------------------------------------------------------
+def test_script_timeline_queries():
+    s = ScenarioScript(
+        name="t",
+        segments=(
+            ModeSegment("urban", 0.5),
+            ModeSegment("highway", 1.0),
+            ModeSegment("urban", 0.5),
+        ),
+        bursts=(Burst(start_s=0.6, duration_s=0.2, work_scale=2.0,
+                      tasks=("img_backbone",)),),
+        dropouts=(SensorDropout("lidar", 1.6, 0.2),),
+    )
+    assert np.isclose(s.duration_s, 2.0)
+    assert s.modes() == ("urban", "highway")
+    assert s.mode_at(0.0) == "urban"
+    assert s.mode_at(0.7) == "highway"
+    assert s.mode_at(99.0) == "urban"          # clamps to last segment
+    assert [m for _t, m in s.boundaries()] == ["urban", "highway", "urban"]
+    assert s.burst_scale("img_backbone", 0.7) == 2.0
+    assert s.burst_scale("img_backbone#r2", 0.7) == 2.0   # replica inherits
+    assert s.burst_scale("lidar_det", 0.7) == 1.0
+    assert s.burst_scale("img_backbone", 0.3) == 1.0
+    assert s.dropped("lidar", 1.7) and not s.dropped("lidar", 1.0)
+    assert not s.dropped("cam_multi", 1.7)
+
+
+def test_script_parse_roundtrip():
+    s = ScenarioScript.parse("urban:0.5 highway:1.0, urban:0.5")
+    assert [seg.mode for seg in s.segments] == ["urban", "highway", "urban"]
+    assert ScenarioScript.parse(s.to_string()).segments == s.segments
+    with pytest.raises(ValueError):
+        ScenarioScript.parse("urban")
+
+
+def test_markov_generator_deterministic_and_covering():
+    gen = default_generator()
+    a = gen.sample(3.0, seed=42)
+    b = gen.sample(3.0, seed=42)
+    assert a == b
+    assert gen.sample(3.0, seed=43) != a
+    assert np.isclose(a.duration_s, 3.0)
+    # self-transitions merge into longer dwells, never adjacent
+    # equal-mode segments
+    for seed in range(20):
+        s = gen.sample(3.0, seed=seed)
+        for s1, s2 in zip(s.segments, s.segments[1:]):
+            assert s1.mode != s2.mode
+
+
+def test_equal_adjacent_segments_are_not_switches():
+    script = ScenarioScript.parse("urban:0.2 urban:0.2 highway:0.2")
+    r = run_scenario(ScenarioSpec(scenario=script, policy="ads_tile",
+                                  replan=False, seed=1))
+    assert r.n_mode_switches == 1   # urban->urban is not a context change
+
+
+# ---------------------------------------------------------------------------
+# engine integration + replanning (shared runs: they are expensive)
+# ---------------------------------------------------------------------------
+SCEN = BUNDLED_SCENARIOS["calm_to_rush"]   # 3 segments, 3 distinct modes
+
+
+@pytest.fixture(scope="module")
+def scenario_reports():
+    out = {}
+    for policy, replan in (
+        ("ads_tile", True), ("ads_tile", False), ("tp_driven", True),
+    ):
+        out[(policy, replan)] = run_scenario(ScenarioSpec(
+            scenario=SCEN, policy=policy, replan=replan, seed=3,
+        ))
+    return out
+
+
+def test_scenario_runs_yield_per_mode_accounting(scenario_reports):
+    for (policy, _replan), r in scenario_reports.items():
+        assert r.n_mode_switches == len(SCEN.segments) - 1
+        assert set(r.mode_stats) == set(SCEN.modes()), policy
+        spans = sum(s.span_s for s in r.mode_stats.values())
+        assert np.isclose(spans, SCEN.duration_s)
+        for s in r.mode_stats.values():
+            assert s.n_completed > 0
+            assert 0.0 <= s.violation_rate <= 1.0
+            assert 0.0 <= s.realloc_frac <= 1.0
+            assert s.effective_frac > 0.0
+        # per-mode sink counts add up to the global chain accounting
+        assert (
+            sum(s.n_completed for s in r.mode_stats.values())
+            == sum(r.chain_count.values())
+        )
+
+
+def test_replan_swaps_charge_realloc(scenario_reports):
+    replan = scenario_reports[("ads_tile", True)]
+    pinned = scenario_reports[("ads_tile", False)]
+    # hot-swaps go through the bounded-reallocation path: the replanned
+    # run must record the two schedule swaps as reallocation events
+    assert replan.n_realloc > 0
+    assert replan.realloc_frac > 0.0
+    # and the waste stays within the paper's headline budget
+    assert replan.realloc_frac < 0.012
+    assert pinned.realloc_frac < 0.012
+
+
+def test_replanning_beats_pinned_schedule(scenario_reports):
+    """Acceptance: on a drive that leaves its opening mode, hot-swapping
+    per-mode schedules strictly lowers the violation rate vs. staying
+    pinned to the initial single-mode table."""
+    replan = scenario_reports[("ads_tile", True)]
+    pinned = scenario_reports[("ads_tile", False)]
+    assert replan.violation_rate < pinned.violation_rate
+
+
+def test_mode_switch_determinism():
+    """Same seed + same scenario script => identical SimReport."""
+    script = ScenarioScript.parse("parking:0.3 urban:0.3 highway:0.3")
+    spec = ScenarioSpec(scenario=script, policy="ads_tile", seed=11)
+    a = run_scenario(spec)
+    b = run_scenario(spec)
+    assert a.task_miss_rate == b.task_miss_rate
+    assert a.effective_frac == b.effective_frac
+    assert a.realloc_frac == b.realloc_frac
+    assert a.n_realloc == b.n_realloc
+    assert a.chain_violations == b.chain_violations
+    assert {
+        m: (s.n_completed, s.n_violations, s.effective_frac)
+        for m, s in a.mode_stats.items()
+    } == {
+        m: (s.n_completed, s.n_violations, s.effective_frac)
+        for m, s in b.mode_stats.items()
+    }
+
+
+def test_sensor_dropout_degrades_downstream():
+    clean = ScenarioScript(
+        name="clean", segments=(ModeSegment("urban", 0.6),),
+    )
+    dropped = dataclasses.replace(
+        clean, name="dropped",
+        dropouts=(SensorDropout("cam_multi", 0.1, 0.3),),
+    )
+    r_clean = run_scenario(ScenarioSpec(scenario=clean, policy="ads_tile",
+                                        replan=False, seed=5))
+    r_drop = run_scenario(ScenarioSpec(scenario=dropped, policy="ads_tile",
+                                       replan=False, seed=5))
+    # dropped frames surface as chain violations, not silent success
+    assert r_drop.violation_rate > r_clean.violation_rate
+
+
+def test_decision_ratios_all_positive(scenario_reports):
+    for r in scenario_reports.values():
+        assert all(x > 0.0 for x in r.decision_ratios)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo sweep
+# ---------------------------------------------------------------------------
+def test_sweep_deterministic_and_aggregates():
+    kw = dict(policies=("ads_tile", "tp_driven"), duration_s=0.6,
+              seed=9, jobs=2, tiles=400)
+    rows = sweep(2, **kw)
+    assert len(rows) == 4      # 2 scenarios x 2 policies
+    # paired seeds: both policies see the same drives
+    by_pol = {}
+    for r in rows:
+        by_pol.setdefault(r["policy"], []).append((r["seed"], r["script"]))
+    assert by_pol["ads_tile"] == by_pol["tp_driven"]
+    # deterministic: re-running the sweep reproduces every row
+    again = sweep(2, **kw)
+    assert rows == again
+    agg = aggregate_sweep(rows)
+    assert set(agg) == {"ads_tile", "tp_driven"}
+    for a in agg.values():
+        assert a["n"] == 2
+        assert 0.0 <= a["violation_rate"] <= 1.0
+        assert a["per_mode"]

@@ -8,7 +8,13 @@ from repro.core.gha.guillotine import bind_memory_controllers, guillotine_cut
 from repro.core.gha.phase1 import run_phase1
 from repro.core.hardware import simba_chip
 from repro.core.latency_model import LatencyModel
-from repro.core.workload import unroll_hyperperiod
+from repro.core.workload import (
+    Chain,
+    DnnTask,
+    SensorTask,
+    Workflow,
+    unroll_hyperperiod,
+)
 
 
 @pytest.fixture(scope="module")
@@ -55,6 +61,62 @@ def test_cockpit_replication_shares_backbone():
     # replicated heads exist 9x
     assert sum(1 for n in names if n.startswith("depth_est")) == 9
     assert len(wf9.chains) == 9 + 8 * len(COCKPIT_CHAINS)
+
+
+def test_cockpit_replication_chain_edge_task_counts():
+    base = make_ads_benchmark()
+    for factor in (4, 6):
+        wf = make_ads_benchmark(cockpit_replicas=factor)
+        extra = factor - 1
+        # each cockpit chain replica adds exactly one private head task
+        # and the one edge feeding it from its (shared) upstream stage
+        n_cockpit = len(COCKPIT_CHAINS)
+        assert len(wf.tasks) == len(base.tasks) + n_cockpit * extra
+        assert len(wf.edges) == len(base.edges) + n_cockpit * extra
+        assert len(wf.chains) == len(base.chains) + n_cockpit * extra
+        # every replica chain reuses the shared upstream stages verbatim
+        for chain in wf.chains:
+            if "#r" not in chain.name:
+                continue
+            orig = next(
+                c for c in base.chains if c.name == chain.name.split("#")[0]
+            )
+            assert chain.nodes[:-1] == orig.nodes[:-1]     # shared prefix
+            assert chain.nodes[-1].startswith(orig.nodes[-1])
+        # shared backbone fans out to every replica head
+        assert (
+            len(wf.succs("img_backbone"))
+            == len(base.succs("img_backbone")) + 2 * extra
+        )   # drivable_seg + semantic_seg replicas
+
+
+def test_unroll_non_integral_periods():
+    # periods that are not integral in any fixed time unit: 1/30 s with
+    # 1/10 s (T_hp = 0.1 s) and 1/30 s with 1/25 s (T_hp = 0.2 s)
+    for r1, r2, thp in ((30, 10, 0.1), (30, 25, 0.2)):
+        wf = Workflow(
+            tasks={
+                "s1": SensorTask(name="s1", period_s=1.0 / r1),
+                "s2": SensorTask(name="s2", period_s=1.0 / r2),
+                "a": DnnTask(name="a", mean_flops=1e9, compiled_dops=(1, 2)),
+                "b": DnnTask(name="b", mean_flops=1e9, compiled_dops=(1, 2)),
+            },
+            edges=[("s1", "a"), ("s2", "b"), ("a", "b")],
+            chains=[Chain("c", ("s1", "a", "b"), 0.5)],
+        )
+        assert np.isclose(wf.hyper_period_s, thp)
+        insts = unroll_hyperperiod(wf)
+        count = {}
+        for i in insts:
+            count[i.task] = count.get(i.task, 0) + 1
+        assert count["s1"] == count["a"] == round(thp * r1)
+        assert count["s2"] == round(thp * r2)
+        assert count["b"] == round(thp * min(r1, r2))  # gated by slowest
+        # dependencies always point backwards in release time
+        by_key = {(i.task, i.index): i for i in insts}
+        for i in insts:
+            for dep in i.preds:
+                assert by_key[dep].release_s <= i.release_s + 1e-12
 
 
 def test_phase1_meets_deadlines(wf, model):
