@@ -1,5 +1,12 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
-the dry-run artifacts:  PYTHONPATH=src python -m benchmarks.make_tables
+the dry-run artifacts, plus the §Scenarios table from any saved
+scenario/rate-sweep runs:  PYTHONPATH=src python -m benchmarks.make_tables
+
+Scenario inputs are the JSON files written by
+``python -m benchmarks.run --only figS_scenarios,figS_rates --out
+benchmarks/results/scenarios/<name>.json`` (CI uploads one per run as a
+workflow artifact; drop downloaded artifacts into that directory to
+render them alongside the paper tables).
 """
 from __future__ import annotations
 
@@ -7,12 +14,50 @@ import json
 from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+SCENARIOS = Path(__file__).resolve().parent / "results" / "scenarios"
 
 
 def fmt_bytes(n):
     if n is None:
         return "-"
     return f"{n/1e9:.2f}"
+
+
+def _derived_map(derived: str) -> dict:
+    """``k1=v1;k2=v2`` -> dict (the emit() convention for figS rows)."""
+    out = {}
+    for part in derived.split(";"):
+        k, sep, v = part.partition("=")
+        if sep:
+            out[k] = v
+    return out
+
+
+def scenario_tables() -> None:
+    files = sorted(SCENARIOS.glob("*.json"))
+    if not files:
+        return
+    print("\n### §Scenarios (figS_* suites: mode switches, replanning, "
+          "sensor-rate churn)\n")
+    print("| run | suite row | viol | miss | realloc | switches | per-mode viol |")
+    print("|---|---|---|---|---|---|---|")
+    for p in files:
+        d = json.loads(p.read_text())
+        for row in d.get("rows", []):
+            name = row.get("name", "")
+            if not name.startswith("figS"):
+                continue
+            kv = _derived_map(row.get("derived", ""))
+            per_mode = " ".join(
+                f"{k[:-5]}={v}" for k, v in sorted(kv.items())
+                if k.endswith("_viol")
+            )
+            print(
+                f"| {p.stem} | {name} "
+                f"| {kv.get('viol', '-')} | {kv.get('miss', '-')} "
+                f"| {kv.get('realloc', '-')} | {kv.get('switches', '-')} "
+                f"| {per_mode or '-'} |"
+            )
 
 
 def main() -> None:
@@ -49,6 +94,8 @@ def main() -> None:
             f"| {r['collective_s']*1e3:.2f} | {r['dominant']} "
             f"| {r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} |"
         )
+
+    scenario_tables()
 
 
 if __name__ == "__main__":

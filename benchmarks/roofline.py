@@ -15,7 +15,6 @@ def run(duration: float = 0.0, seed: int = 0) -> None:
     if not RESULTS.exists():
         emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
         return
-    rows = []
     for p in sorted(RESULTS.glob("*.json")):
         d = json.loads(p.read_text())
         if d.get("status") != "OK":

@@ -20,11 +20,13 @@ from __future__ import annotations
 import argparse
 import contextlib
 import io
+import json
 import sys
 import time
+from pathlib import Path
 
 from . import fig6_casestudy, fig11_ablation, fig12_e2e, fig13_scaling
-from . import figS_scenarios, headroom, roofline, table2_overhead
+from . import figS_rates, figS_scenarios, headroom, roofline, table2_overhead
 
 SUITES = {
     "fig6": fig6_casestudy.run,
@@ -32,10 +34,33 @@ SUITES = {
     "fig12": fig12_e2e.run,
     "fig13": fig13_scaling.run,
     "figS": figS_scenarios.run,
+    "figS_rates": figS_rates.run,
     "table2": table2_overhead.run,
     "headroom": headroom.run,
     "roofline": roofline.run,
 }
+
+#: CLI conveniences: the scenario suites also answer to their module names
+ALIASES = {"figS_scenarios": "figS", "rates": "figS_rates"}
+
+
+def _rows_from_csv(text: str) -> list:
+    """Parse ``emit`` output back into structured rows (for --out)."""
+    rows = []
+    for line in text.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) < 2 or parts[0] == "name":
+            continue
+        try:
+            value = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({
+            "name": parts[0],
+            "us_per_call": value,
+            "derived": parts[2] if len(parts) > 2 else "",
+        })
+    return rows
 
 
 def _suite_worker(args: tuple) -> str:
@@ -55,31 +80,52 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=1)
     ap.add_argument("--jobs", type=int, default=1,
                     help="run independent suites in N worker processes")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="also write the rows as structured JSON "
+                         "(consumed by benchmarks.make_tables)")
     args = ap.parse_args()
 
     names = args.only.split(",") if args.only else list(SUITES)
+    names = [ALIASES.get(n, n) for n in names]
     unknown = [n for n in names if n not in SUITES]
     if unknown:
         ap.error(f"unknown suite(s) {unknown} (choose from {list(SUITES)})")
     print("name,us_per_call,derived")
+    outputs = []
     if args.jobs > 1 and len(names) > 1:
         from repro.scenarios.runner import parallel_map
 
         t0 = time.time()
-        outs = parallel_map(
+        outputs = parallel_map(
             _suite_worker,
             [(n, args.duration, args.seed) for n in names],
             jobs=args.jobs,
         )
-        for name, out in zip(names, outs):
+        for name, out in zip(names, outputs):
             sys.stdout.write(out)
             print(f"# {name} done", file=sys.stderr)
         print(f"# all suites done in {time.time()-t0:.1f}s", file=sys.stderr)
-        return
-    for name in names:
-        t0 = time.time()
-        SUITES[name](duration=args.duration, seed=args.seed)
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    else:
+        for name in names:
+            t0 = time.time()
+            if args.out:
+                out = _suite_worker((name, args.duration, args.seed))
+                sys.stdout.write(out)
+                outputs.append(out)
+            else:
+                SUITES[name](duration=args.duration, seed=args.seed)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.out:
+        path = Path(args.out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps({
+            "suites": names,
+            "duration": args.duration,
+            "seed": args.seed,
+            "rows": _rows_from_csv("".join(outputs)),
+        }, indent=2))
+        print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -18,10 +18,9 @@ Both are weighted by while-loop trip counts (see ``hlo._Module``).
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Set, Tuple
+from typing import Dict, List, Optional, Set
 
 from .hlo import (
-    _COLLECTIVES,
     _INSTR_RE,
     _Module,
     _OPERAND_RE,

@@ -14,7 +14,7 @@ the collective roofline term is underestimated by the layer count.
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 __all__ = ["parse_hlo_collectives", "collective_bytes"]
 

@@ -16,7 +16,7 @@ for MoE.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from .hlo import collective_bytes
 

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import Dict
 
 from ..models.config import ModelConfig
 from .shapes import SHAPES, ShapeSpec, runnable_cells

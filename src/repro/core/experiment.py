@@ -10,8 +10,8 @@ from typing import Dict, Optional
 
 from .baselines import CyclicPolicy, ElasticCyclicPolicy, TpDrivenPolicy
 from .benchmark import make_ads_benchmark
-from .gha import GHACompiler, Schedule
-from .hardware import HardwareModel, simba_chip
+from .gha import GHACompiler
+from .hardware import simba_chip
 from .latency_model import LatencyModel
 from .runtime import AdsTilePolicy
 from .sim import SimConfig, Simulator, SimReport

@@ -15,7 +15,7 @@ search until a fixed point.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from ..workload import Workflow, unroll_hyperperiod
 from .phase1 import Phase1Result, chain_priority
@@ -123,7 +123,6 @@ class _Scorer:
     SUSTAIN_MARGIN = 1.15
 
     def capacities(self, bins: List[List[str]]):
-        np = self.np
         caps = []
         for b in bins:
             idx = [self.index[t] for t in b]
@@ -143,7 +142,6 @@ class _Scorer:
     def score(
         self, bins: List[List[str]], w: Tuple[float, float, float]
     ) -> Tuple[float, List[int]]:
-        np = self.np
         w1, w2, w3 = w
         caps = self.capacities(bins)
 

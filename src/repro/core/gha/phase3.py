@@ -15,12 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from ..latency_model import LatencyModel
 from ..workload import Workflow
 from .phase1 import Phase1Result
-from .phase2 import Phase2Result, build_windows
+from .phase2 import Phase2Result
 
 __all__ = ["Phase3Result", "run_phase3"]
 

@@ -8,7 +8,7 @@ state moves — the migration-volume model the engine charges.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, List, Set
 
 __all__ = ["L2PMap"]
 

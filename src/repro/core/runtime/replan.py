@@ -54,7 +54,13 @@ class SchedulePortfolio:
         ``modes`` maps mode name to any object exposing
         ``transform_model(model) -> LatencyModel`` (duck-typed so this
         module does not depend on the scenarios package; in practice a
-        :class:`repro.scenarios.DrivingMode`).
+        :class:`repro.scenarios.DrivingMode`).  Modes that also expose
+        ``transform_workflow(wf) -> Workflow`` (sensor-rate modulation)
+        are compiled against their *own* workflow — and therefore their
+        own hyper-period: Phase II's reservation windows, instance
+        counts and per-partition capacities all follow the mode's
+        sensor rates, so a hot-swap at a rate seam installs a table
+        that actually matches the new release pattern.
 
         Heavy modes may be deadline-infeasible at the compiler's
         conservative quantile: lax budgets then defeat minimum-quota
@@ -68,13 +74,17 @@ class SchedulePortfolio:
         out: Dict[str, Schedule] = {}
         for name, mode in modes.items():
             m_model = mode.transform_model(model)
+            transform_wf = getattr(mode, "transform_workflow", None)
+            m_wf = transform_wf(wf) if transform_wf is not None else wf
             for q in (compiler.q,) + tuple(x for x in q_ladder if x < compiler.q):
-                sched = dataclasses.replace(compiler, q=q).compile(m_model, wf)
+                sched = dataclasses.replace(compiler, q=q).compile(m_model, m_wf)
                 if (
                     not sched.meta["phase1_infeasible"]
                     and not sched.meta["phase3_violations"]
                 ):
                     break
+            sched.meta["mode"] = name
+            sched.meta["hyper_period_s"] = m_wf.hyper_period_s
             out[name] = sched
         return cls(out)
 

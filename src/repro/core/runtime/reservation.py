@@ -11,7 +11,7 @@
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 from ..sim.engine import Job
 

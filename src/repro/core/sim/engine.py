@@ -31,14 +31,14 @@ import dataclasses
 import enum
 import heapq
 import math
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..gha.schedule import Schedule
 from ..hardware import HardwareModel
 from ..latency_model import LatencyModel
-from ..workload import TaskInstance, Workflow, unroll_hyperperiod
+from ..workload import Workflow, unroll_hyperperiod
 from .policy import Policy
 
 __all__ = [
@@ -137,7 +137,11 @@ class SimConfig:
     #: engine stays independent of the scenarios package): jobs sample
     #: from the mode active at their release time, segment boundaries
     #: become ``mode_change`` events, and the report gains per-mode
-    #: accounting.  None reproduces the stationary single-profile run
+    #: accounting.  Modes that modulate sensor *rates* change the
+    #: hyper-period mid-run: the engine unrolls the DAG piecewise per
+    #: rate regime (``scenario.rate_regimes``), re-anchoring the sensor
+    #: timers at each seam while in-flight jobs of the old regime drain
+    #: normally.  None reproduces the stationary single-profile run
     #: bit-for-bit.
     scenario: Optional[object] = None
 
@@ -244,8 +248,6 @@ class Simulator:
         self._sink_by_mode: Dict[Tuple[str, str], List[int]] = {}
         self.n_mode_switches = 0
         self._build_jobs()
-        # chain accounting: (chain, cycle, sink_idx) -> source release
-        self._chain_records: List[Tuple[str, int, int]] = []
         self.chain_latencies: Dict[str, List[float]] = {
             c.name: [] for c in wf.chains
         }
@@ -256,25 +258,14 @@ class Simulator:
     # ------------------------------------------------------------------
     # construction
     # ------------------------------------------------------------------
-    def _build_jobs(self) -> None:
-        wf, cfg = self.wf, self.cfg
-        thp = wf.hyper_period_s
-        n_cycles = max(1, int(math.ceil(cfg.duration_s / thp)))
-        self.n_cycles = n_cycles
-        insts = unroll_hyperperiod(wf)
-        self._insts = insts
-        index_of: Dict[Tuple[str, int], int] = {}
-
-        # tightest E2E deadline offset per task
-        ddl_off: Dict[str, float] = {}
-        for t in wf.tasks:
-            chains = wf.chain_for(t)
-            ddl_off[t] = min((c.deadline_s for c in chains), default=math.inf)
-
-        # chain sink -> source instance resolution (within one cycle)
+    def _chain_sources(self, insts) -> Dict[Tuple[str, int], float]:
+        """(chain name, sink instance index) -> source sample time, by
+        walking each sink's predecessor chain through the unrolled
+        instance graph (same units as the instances' releases)."""
         inst_by_key = {(i.task, i.index): i for i in insts}
+        release_of = {(i.task, i.index): i.release_s for i in insts}
 
-        def trace_source(chain, sink_idx: int) -> Optional[int]:
+        def trace(chain, sink_idx: int) -> Optional[int]:
             node_i = len(chain.nodes) - 1
             cur = inst_by_key.get((chain.nodes[node_i], sink_idx))
             while cur is not None and node_i > 0:
@@ -288,86 +279,148 @@ class Simulator:
                 node_i -= 1
             return cur.index if cur is not None else None
 
-        self._chain_src: Dict[Tuple[str, int], Tuple[int, float]] = {}
-        for chain in wf.chains:
+        out: Dict[Tuple[str, int], float] = {}
+        for chain in self.wf.chains:
             sink = chain.nodes[-1]
             n_sink = sum(1 for i in insts if i.task == sink)
             for k in range(n_sink):
-                src_idx = trace_source(chain, k)
+                src_idx = trace(chain, k)
                 if src_idx is None:
                     continue
-                src_rel = next(
-                    i.release_s for i in insts
-                    if i.task == chain.nodes[0] and i.index == src_idx
-                )
-                self._chain_src[(chain.name, k)] = (src_idx, src_rel)
+                out[(chain.name, k)] = release_of[(chain.nodes[0], src_idx)]
+        return out
 
+    def _build_jobs(self) -> None:
+        wf, cfg = self.wf, self.cfg
+        scen = self.cfg.scenario
         # non-stationary workloads: jobs sample from the profile of the
         # driving mode active at their release time
-        scen = self.cfg.scenario
         mode_profiles = scen.profiles_for(self.model) if scen is not None else None
 
-        tile_flops = self.hw.tile_flops
-        for cycle in range(n_cycles):
-            base = cycle * thp
-            for inst in insts:
-                task = wf.tasks[inst.task]
-                rel_t = base + inst.release_s
-                if mode_profiles is not None:
-                    prof = mode_profiles[scen.mode_at(rel_t)][inst.task]
-                else:
-                    prof = self.model.profiles[inst.task]
-                jid = len(self.jobs)
-                index_of[(inst.task, inst.index)] = jid
-                if task.is_sensor:
-                    lat = float(
-                        prof.sensor_latency.quantile(
-                            min(self.rng.uniform(0.001, 0.999), 0.999)
-                        )
-                    )
-                    job = Job(
-                        jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
-                        release=base + inst.release_s, is_sensor=True,
-                        work_flops=0.0, io_s=lat, sync_s=0.0, partition=-1,
-                        ert=base + inst.release_s,
-                        sub_ddl=base + inst.release_s + lat * 2,
-                        e2e_ddl=base + inst.release_s + ddl_off[inst.task],
-                        plan_dop=0,
-                        drop_at_release=(
-                            scen is not None and scen.dropped(inst.task, rel_t)
-                        ),
-                    )
-                else:
-                    w = float(
-                        self.rng.lognormal(prof.work.mu, max(prof.work.sigma, 1e-12))
-                    ) if prof.work.mean > 0 else 0.0
-                    io = prof.io.base + (
-                        float(self.rng.exponential(1.0 / prof.io.rate))
-                        if prof.io.rate > 0 else 0.0
-                    )
-                    if scen is not None:
-                        w *= scen.burst_scale(inst.task, rel_t)
-                    plan = self.schedule.plans[inst.task]
-                    job = Job(
-                        jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
-                        release=base + inst.release_s, is_sensor=False,
-                        work_flops=w, io_s=io, sync_s=prof.sync_per_tile_s,
-                        partition=plan.partition,
-                        ert=base + inst.release_s + plan.ert_s,
-                        sub_ddl=base + inst.release_s + plan.subdeadline_s,
-                        e2e_ddl=base + inst.release_s + ddl_off[inst.task],
-                        plan_dop=plan.dop,
-                    )
-                self.jobs.append(job)
+        # piecewise hyper-period re-unrolling: scenario modes may
+        # modulate sensor rates, which changes the hyper-period mid-run.
+        # The timeline splits into regimes of constant sensor periods;
+        # each regime re-anchors the hardware timers at its start and
+        # unrolls its *own* workflow.  A script with no rate-modulating
+        # mode (or no scenario at all) is a single regime and reproduces
+        # the stationary cyclic unrolling bit-for-bit.  Regimes past the
+        # simulation horizon build no jobs (a script may be far longer
+        # than the run).
+        if scen is not None and hasattr(scen, "rate_regimes"):
+            regimes = [
+                r for r in scen.rate_regimes(wf, cfg.duration_s)
+                if r[0] < cfg.duration_s - 1e-12
+            ]
+        else:
+            regimes = [(0.0, cfg.duration_s, wf)]
+        self._regimes = regimes
 
-            # wire dependencies (within the same cycle)
-            for inst in insts:
-                jid = index_of[(inst.task, inst.index)]
-                job = self.jobs[jid]
-                job.deps_remaining = len(inst.preds)
-                for (pt, pj) in inst.preds:
-                    self.jobs[index_of[(pt, pj)]].succs.append(jid)
-            index_of.clear()
+        # tightest E2E deadline offset per task (chain structure and
+        # deadlines are rate-independent)
+        ddl_off: Dict[str, float] = {}
+        for t in wf.tasks:
+            chains = wf.chain_for(t)
+            ddl_off[t] = min((c.deadline_s for c in chains), default=math.inf)
+
+        # chain accounting: (chain name, sink jid) -> absolute source
+        # sample time, valid across regime seams
+        self._sink_src: Dict[Tuple[str, int], float] = {}
+
+        sink_of = {c.name: c.nodes[-1] for c in wf.chains}
+        for ri, (r0, r1, wf_r) in enumerate(regimes):
+            thp = wf_r.hyper_period_s
+            final = ri == len(regimes) - 1
+            span = (cfg.duration_s - r0) if final else (r1 - r0)
+            # the - 1e-9 absorbs float accumulation in segment bounds
+            # (0.4 + 0.8 > 1.2), which would otherwise add an empty cycle
+            n_cycles = max(1, int(math.ceil(span / thp - 1e-9)))
+            # one segment unroll per regime: every full cycle repeats its
+            # structure at a +cycle*thp offset; only a non-final regime's
+            # last cycle (truncated at the seam, where the next regime
+            # re-anchors and re-releases from r1) unrolls separately
+            insts_full = unroll_hyperperiod(wf_r, t0=r0, t1=r0 + thp)
+            src_full = self._chain_sources(insts_full)
+            index_of: Dict[Tuple[str, int], int] = {}
+            for cycle in range(n_cycles):
+                off = cycle * thp
+                base = r0 + off
+                t1 = base + thp if final else min(base + thp, r1)
+                if t1 - base <= 1e-12:
+                    continue
+                if t1 >= base + thp - 1e-12:   # full cycle
+                    insts = insts_full
+                    src_rel_of = {k: v + off for k, v in src_full.items()}
+                else:                           # truncated seam cycle
+                    insts = unroll_hyperperiod(wf_r, t0=base, t1=t1)
+                    src_rel_of = self._chain_sources(insts)
+                    off = 0.0                   # releases already absolute
+
+                for inst in insts:
+                    task = wf.tasks[inst.task]
+                    rel_t = inst.release_s + off
+                    if mode_profiles is not None:
+                        prof = mode_profiles[scen.mode_at(rel_t)][inst.task]
+                    else:
+                        prof = self.model.profiles[inst.task]
+                    jid = len(self.jobs)
+                    index_of[(inst.task, inst.index)] = jid
+                    if task.is_sensor:
+                        lat = float(
+                            prof.sensor_latency.quantile(
+                                min(self.rng.uniform(0.001, 0.999), 0.999)
+                            )
+                        )
+                        job = Job(
+                            jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
+                            release=rel_t, is_sensor=True,
+                            work_flops=0.0, io_s=lat, sync_s=0.0, partition=-1,
+                            ert=rel_t,
+                            sub_ddl=rel_t + lat * 2,
+                            e2e_ddl=rel_t + ddl_off[inst.task],
+                            plan_dop=0,
+                            drop_at_release=(
+                                scen is not None and scen.dropped(inst.task, rel_t)
+                            ),
+                        )
+                    else:
+                        w = float(
+                            self.rng.lognormal(prof.work.mu, max(prof.work.sigma, 1e-12))
+                        ) if prof.work.mean > 0 else 0.0
+                        io = prof.io.base + (
+                            float(self.rng.exponential(1.0 / prof.io.rate))
+                            if prof.io.rate > 0 else 0.0
+                        )
+                        if scen is not None:
+                            w *= scen.burst_scale(inst.task, rel_t)
+                        plan = self.schedule.plans[inst.task]
+                        job = Job(
+                            jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
+                            release=rel_t, is_sensor=False,
+                            work_flops=w, io_s=io, sync_s=prof.sync_per_tile_s,
+                            partition=plan.partition,
+                            ert=rel_t + plan.ert_s,
+                            sub_ddl=rel_t + plan.subdeadline_s,
+                            e2e_ddl=rel_t + ddl_off[inst.task],
+                            plan_dop=plan.dop,
+                        )
+                    self.jobs.append(job)
+
+                # wire dependencies (within the same cycle: a job's
+                # predecessors release no later than it, so the segment
+                # unroll never leaves one on the far side of a seam)
+                for inst in insts:
+                    jid = index_of[(inst.task, inst.index)]
+                    job = self.jobs[jid]
+                    job.deps_remaining = len(inst.preds)
+                    for (pt, pj) in inst.preds:
+                        self.jobs[index_of[(pt, pj)]].succs.append(jid)
+                # register absolute chain-source sample times for the
+                # sinks of this cycle
+                for (cname, k), src_t0 in src_rel_of.items():
+                    sink_jid = index_of.get((sink_of[cname], k))
+                    if sink_jid is not None:
+                        self._sink_src[(cname, sink_jid)] = src_t0
+                index_of.clear()
 
     # ------------------------------------------------------------------
     # event queue
@@ -685,11 +738,9 @@ class Simulator:
         for chain in self.wf.chain_for(job.task):
             if chain.nodes[-1] != job.task:
                 continue
-            src = self._chain_src.get((chain.name, job.idx))
-            if src is None:
+            t0 = self._sink_src.get((chain.name, job.jid))
+            if t0 is None:
                 continue
-            _, src_rel = src
-            t0 = job.cycle * self.wf.hyper_period_s + src_rel
             lat = self.now - t0
             violated = lat > chain.deadline_s + 1e-12 or job.degraded
             self.chain_count[chain.name] += 1
@@ -713,11 +764,7 @@ class Simulator:
             self.chain_count[chain.name] += 1
             self.chain_violations[chain.name] += 1
             if self.cfg.scenario is not None:
-                src = self._chain_src.get((chain.name, job.idx))
-                t0 = (
-                    job.cycle * self.wf.hyper_period_s + src[1]
-                    if src is not None else job.release
-                )
+                t0 = self._sink_src.get((chain.name, job.jid), job.release)
                 m = self.cfg.scenario.mode_at(t0)
                 rec = self._sink_by_mode.setdefault((chain.name, m), [0, 0])
                 rec[0] += 1
@@ -852,21 +899,18 @@ class Simulator:
 
         # chains whose sink never completed within the horizon count as
         # violations (starvation must not look like success)
-        thp = self.wf.hyper_period_s
         scen = self.cfg.scenario
         for chain in self.wf.chains:
             expected = 0
             exp_mode: Dict[str, int] = {}
-            for (cname, _k), (_si, src_rel) in self._chain_src.items():
+            for (cname, _jid), t0 in self._sink_src.items():
                 if cname != chain.name:
                     continue
-                for cycle in range(self.n_cycles):
-                    t0 = cycle * thp + src_rel
-                    if t0 + chain.deadline_s <= self.cfg.duration_s:
-                        expected += 1
-                        if scen is not None:
-                            m = scen.mode_at(t0)
-                            exp_mode[m] = exp_mode.get(m, 0) + 1
+                if t0 + chain.deadline_s <= self.cfg.duration_s:
+                    expected += 1
+                    if scen is not None:
+                        m = scen.mode_at(t0)
+                        exp_mode[m] = exp_mode.get(m, 0) + 1
             have = self.chain_count[chain.name]
             deficit = max(0, expected - have)
             if deficit:

@@ -15,7 +15,7 @@ import dataclasses
 import math
 from fractions import Fraction
 from functools import reduce
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 __all__ = [
     "Task",
@@ -191,6 +191,38 @@ class Workflow:
     def chain_for(self, name: str) -> List[Chain]:
         return [c for c in self.chains if name in c.nodes]
 
+    @property
+    def sensor_periods(self) -> Dict[str, float]:
+        """``{sensor name: period_s}`` — the rate signature of the
+        workflow (two workflows with equal signatures unroll alike)."""
+        return {t.name: t.period_s for t in self.sensor_tasks}
+
+    def with_sensor_rates(self, periods: Mapping[str, float]) -> "Workflow":
+        """Re-derive the workflow with new sensor periods (per-mode rate
+        modulation: camera 30->15 Hz at night, radar 10->20 Hz in rain).
+
+        ``periods`` maps sensor task names to their new ``period_s``;
+        the DAG, chains and every DNN task are untouched.  Returns
+        ``self`` when nothing effectively changes, so regime detection
+        can compare identity cheaply.
+        """
+        for name, p in periods.items():
+            task = self.tasks.get(name)
+            if task is None or not task.is_sensor:
+                raise ValueError(f"{name!r} is not a sensor task")
+            if p <= 0:
+                raise ValueError(f"{name}: non-positive period {p}")
+        changed = {
+            n: float(p) for n, p in periods.items()
+            if not math.isclose(self.tasks[n].period_s, p, rel_tol=1e-12)
+        }
+        if not changed:
+            return self
+        tasks = dict(self.tasks)
+        for n, p in changed.items():
+            tasks[n] = dataclasses.replace(tasks[n], period_s=p)
+        return Workflow(tasks=tasks, edges=list(self.edges), chains=list(self.chains))
+
     def replicate_cockpit(self, factor: int, cockpit_chain_names: Sequence[str]) -> "Workflow":
         """Scale workload by replicating cockpit pipelines (paper §V-A,
         nodes 11-14).  A node is replicated only if *every* chain it
@@ -250,22 +282,44 @@ class TaskInstance:
         return (self.task, self.index)
 
 
-def unroll_hyperperiod(wf: Workflow) -> List[TaskInstance]:
-    """Unroll the DAG over one hyper-period (paper §II-C2).
+def unroll_hyperperiod(
+    wf: Workflow,
+    t0: float = 0.0,
+    t1: Optional[float] = None,
+    phase_s: float = 0.0,
+) -> List[TaskInstance]:
+    """Unroll the DAG over a segment ``[t0, t1)`` (paper §II-C2).
 
-    Each task ``v`` decomposes into ``N_v = T_hp / T_v`` instances.  A DNN
-    instance depends on the *latest* instance of each predecessor released
-    at or before its own release (event-time matching, §IV-C).
+    With the defaults this is one hyper-period starting at 0: each task
+    ``v`` decomposes into ``N_v = T_hp / T_v`` instances.  A DNN instance
+    depends on the *latest* instance of each predecessor released at or
+    before its own release (event-time matching, §IV-C).
+
+    Passing ``t0``/``t1`` unrolls an arbitrary segment with *absolute*
+    release times: sensor timers are re-anchored at ``t0 + phase_s``
+    (``phase_s`` is normalised into one period), which is what a
+    mid-run sensor-rate change does — the hardware timers restart at
+    the regime boundary, and the piecewise unrollings on either side
+    share no instances (no double-released, no lost jobs).  ``t1 - t0``
+    need not be a multiple of the hyper-period.
     """
-    thp = wf.hyper_period_s
+    if t1 is None:
+        t1 = t0 + wf.hyper_period_s
+    if t1 <= t0:
+        raise ValueError(f"empty unroll segment [{t0}, {t1})")
     instances: List[TaskInstance] = []
     releases: Dict[str, List[float]] = {}
 
     for name in wf.topological_order():
         task = wf.tasks[name]
         if isinstance(task, SensorTask):
-            n = int(round(thp / task.period_s))
-            releases[name] = [i * task.period_s for i in range(n)]
+            period = task.period_s
+            first = t0 + (phase_s % period if phase_s else 0.0)
+            n = max(0, int(math.ceil((t1 - first) / period - 1e-9)))
+            releases[name] = [
+                r for r in (first + i * period for i in range(n))
+                if r < t1 - 1e-12
+            ]
         else:
             preds = wf.preds(name)
             # release times = those of the rate-gating (slowest) predecessor
@@ -280,7 +334,12 @@ def unroll_hyperperiod(wf: Workflow) -> List[TaskInstance]:
                 for p in wf.preds(name):
                     # latest predecessor instance with release <= rel
                     cand = [j for j, r in enumerate(releases[p]) if r <= rel + 1e-12]
-                    deps.append((p, cand[-1] if cand else 0))
+                    if cand:
+                        deps.append((p, cand[-1]))
+                    # else: the predecessor has not sampled yet in this
+                    # segment (possible only with per-sensor phase
+                    # offsets); the instance runs without that input
+                    # rather than depending on a *future* sample
             instances.append(
                 TaskInstance(task=name, index=i, release_s=rel, preds=tuple(deps))
             )

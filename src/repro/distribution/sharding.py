@@ -10,7 +10,7 @@ conventions below, and a structural test pins the mapping.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 from jax.sharding import PartitionSpec as P

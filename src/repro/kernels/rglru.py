@@ -12,7 +12,6 @@ exactly the fusion the VPU wants.  Width blocks are lane-aligned (128).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

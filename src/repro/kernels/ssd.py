@@ -16,7 +16,6 @@ MXU-aligned for chunk sizes that are multiples of 128.  The wrapper in
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ device XLA flag.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -34,9 +33,9 @@ from .common import (
 )
 from .config import ModelConfig
 from .mamba2 import init_ssm_state, mamba_apply, mamba_init
-from .mla import init_mla_cache, mla_apply, mla_init
+from .mla import mla_apply, mla_init
 from .moe import moe_apply, moe_init
-from .rglru import init_lru_state, rglru_apply, rglru_init
+from .rglru import rglru_apply, rglru_init
 
 __all__ = ["LM", "init_params", "train_step_fn", "prefill_fn", "decode_step_fn"]
 

@@ -10,9 +10,7 @@ single "shard" holding all experts.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ is elementwise over the width, so it shards perfectly over 'model'.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -17,7 +17,12 @@ as a transform over :class:`~repro.core.latency_model.TaskLatencyProfile`s:
 * ``sensor_latency_scale`` — sensor preprocessing cost (e.g. denoising
   in rain, longer exposure at night);
 * ``task_work_scale`` — per-task extra multipliers keyed by the *base*
-  task name (cockpit replicas ``foo#r2`` inherit ``foo``'s entry).
+  task name (cockpit replicas ``foo#r2`` inherit ``foo``'s entry);
+* ``sensor_rate_scale`` / ``sensor_rate_hz`` — per-sensor *rate*
+  modulation (ADS sensors run 10-240 Hz and adapt to context: cameras
+  downclock at night for exposure, radar/LiDAR upclocks in rain).
+  Rate changes alter the workflow's hyper-period, so the simulator
+  re-unrolls the DAG piecewise at every regime boundary.
 
 Modes are registered in a module-level registry so scenario scripts can
 reference them by name; :func:`register_mode` adds custom ones.
@@ -33,6 +38,7 @@ from ..core.latency_model import (
     ShiftedExponential,
     TaskLatencyProfile,
 )
+from ..core.workload import Workflow
 
 __all__ = [
     "DrivingMode",
@@ -58,7 +64,18 @@ class DrivingMode:
     io_rate_scale: float = 1.0
     sensor_latency_scale: float = 1.0
     task_work_scale: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    #: per-sensor rate multipliers (2.0 doubles the rate, halving the
+    #: period), keyed by base sensor name
+    sensor_rate_scale: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    #: absolute per-sensor rate overrides in Hz; take precedence over
+    #: ``sensor_rate_scale``
+    sensor_rate_hz: Mapping[str, float] = dataclasses.field(default_factory=dict)
     description: str = ""
+
+    def __post_init__(self) -> None:
+        for k, v in {**self.sensor_rate_scale, **self.sensor_rate_hz}.items():
+            if v <= 0:
+                raise ValueError(f"mode {self.name}: non-positive rate for {k}")
 
     def _task_scale(self, task: str) -> float:
         base = task.split("#")[0]  # cockpit replicas inherit the base task
@@ -94,6 +111,46 @@ class DrivingMode:
             model.hw,
         )
 
+    # -- sensor-rate modulation -------------------------------------------
+    @property
+    def modulates_rates(self) -> bool:
+        return bool(self.sensor_rate_scale or self.sensor_rate_hz)
+
+    def sensor_period(self, sensor: str, base_period_s: float) -> float:
+        """The period of ``sensor`` under this mode (absolute ``_hz``
+        override first, else the base period over ``_scale``)."""
+        base = sensor.split("#")[0]
+        hz = self.sensor_rate_hz.get(base)
+        if hz is not None:
+            return 1.0 / hz
+        return base_period_s / float(self.sensor_rate_scale.get(base, 1.0))
+
+    def transform_workflow(self, wf: Workflow) -> Workflow:
+        """``wf`` re-derived with this mode's sensor rates (returns
+        ``wf`` itself when the mode modulates no rate).  The per-mode
+        GHA compile consumes this so each mode's reservation table is
+        built against its *own* hyper-period.
+
+        Rate keys naming no sensor of ``wf`` raise: a typo'd key would
+        otherwise silently modulate nothing.
+        """
+        if not self.modulates_rates:
+            return wf
+        known = {s.name.split("#")[0] for s in wf.sensor_tasks}
+        unknown = sorted(
+            k for k in {**self.sensor_rate_scale, **self.sensor_rate_hz}
+            if k not in known
+        )
+        if unknown:
+            raise ValueError(
+                f"mode {self.name}: rate modulation for unknown sensor(s) "
+                f"{unknown} (workflow sensors: {sorted(known)})"
+            )
+        return wf.with_sensor_rates({
+            s.name: self.sensor_period(s.name, s.period_s)
+            for s in wf.sensor_tasks
+        })
+
 
 #: the bundled mode registry (name -> DrivingMode)
 MODES: Dict[str, DrivingMode] = {}
@@ -123,7 +180,10 @@ def mode_names() -> Tuple[str, ...]:
 # bundled modes — scales chosen so the spread across modes reproduces the
 # up-to-3.3x context variation the paper cites; per-task overrides follow
 # the mode structure of Liu et al. (detection/prediction scale with agent
-# density, sensors with weather/illumination).
+# density, sensors with weather/illumination).  Rate modulation follows
+# the same source: cameras halve their rate at night (exposure), the
+# LiDAR/radar group doubles in rain (denser returns needed), rush-hour
+# perception upclocks the cameras.
 # ---------------------------------------------------------------------------
 register_mode(DrivingMode(
     name="urban",
@@ -161,6 +221,7 @@ register_mode(DrivingMode(
     io_rate_scale=0.60,
     sensor_latency_scale=1.50,
     task_work_scale={"lidar_det": 1.20, "depth_est": 1.20},
+    sensor_rate_scale={"lidar": 2.0},       # 10 -> 20 Hz: denser returns
     description="rain/fog: denoising, degraded returns, heavy tails",
 ))
 register_mode(DrivingMode(
@@ -169,5 +230,20 @@ register_mode(DrivingMode(
     p99_ratio_scale=1.15,
     sensor_latency_scale=1.30,
     task_work_scale={"traffic_light": 1.30, "optical_flow": 1.20},
+    sensor_rate_scale={"cam_multi": 0.5},   # 30 -> 15 Hz: longer exposure
     description="low light: longer exposure, noisier imagery",
+))
+register_mode(DrivingMode(
+    name="rush_hour",
+    work_scale=1.35,
+    p99_ratio_scale=1.20,
+    io_rate_scale=0.75,
+    task_work_scale={
+        "vis_det": 1.35,
+        "traj_pred": 1.60,
+        "path_plan": 1.55,
+        "traffic_light": 1.25,
+    },
+    sensor_rate_scale={"cam_multi": 2.0},   # 30 -> 60 Hz: dense traffic
+    description="peak urban density: cameras upclocked, heavy prediction",
 ))

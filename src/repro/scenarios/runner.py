@@ -24,7 +24,7 @@ import numpy as np
 from ..core.experiment import ExperimentSpec, build_stack, make_policy
 from ..core.runtime import OnlineReplanner, SchedulePortfolio
 from ..core.sim import SimConfig, Simulator, SimReport
-from .modes import get_mode
+from .modes import get_mode, register_mode
 from .script import MarkovScenarioGenerator, ScenarioScript, default_generator
 
 __all__ = [
@@ -54,6 +54,11 @@ class ScenarioSpec(ExperimentSpec):
     #: sweep() fills this so N scenarios share one portfolio per policy
     #: instead of recompiling identical GHA tables in every worker.
     portfolio: Optional[SchedulePortfolio] = None
+    #: mode definitions to (re-)register before running.  Spawned pool
+    #: workers re-import the bundled registry only, so custom modes
+    #: added via register_mode must travel with the spec; sweep() fills
+    #: this automatically from the generator's mode set.
+    mode_defs: Optional[Dict[str, object]] = None
 
     def __post_init__(self) -> None:
         if self.scenario is None:
@@ -74,6 +79,11 @@ def compile_portfolio(
 
 def run_scenario(spec: ScenarioSpec) -> SimReport:
     """Run one scenario end-to-end and return its :class:`SimReport`."""
+    if spec.mode_defs:
+        # idempotent in the parent; in a spawn worker this restores
+        # custom modes the fresh registry does not have
+        for mode in spec.mode_defs.values():
+            register_mode(mode, overwrite=True)
     scen = spec.scenario
     wf, _hw, model, compiler = build_stack(spec)
 
@@ -191,6 +201,7 @@ def sweep(
     """
     gen = generator or default_generator()
     all_modes = sorted(gen.transitions)
+    mode_defs = {m: get_mode(m) for m in all_modes}
     specs: List[ScenarioSpec] = []
     portfolios: Dict[str, SchedulePortfolio] = {}
     for i in range(n_scenarios):
@@ -199,6 +210,7 @@ def sweep(
         for pol in policies:
             spec = ScenarioSpec(
                 scenario=script, policy=pol, replan=replan, seed=s_i,
+                mode_defs=mode_defs,
                 **spec_kw,
             )
             # one portfolio per policy, covering every mode the

@@ -21,11 +21,12 @@ where each scenario is one drive.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 from ..core.latency_model import LatencyModel, TaskLatencyProfile
+from ..core.workload import Workflow
 from .modes import get_mode
 
 __all__ = [
@@ -134,6 +135,40 @@ class ScenarioScript:
 
     def dropped(self, sensor: str, t: float) -> bool:
         return any(d.active(sensor, t) for d in self.dropouts)
+
+    def rate_regimes(
+        self, wf: Workflow, end_s: float
+    ) -> List[Tuple[float, float, Workflow]]:
+        """Piecewise-constant sensor-rate timeline: ``(t0, t1, wf_r)``
+        spans covering ``[0, max(end_s, script length))``.
+
+        Adjacent segments whose modes agree on every sensor period are
+        merged into one regime — a mode switch that touches no rate
+        must not re-anchor the sensor timers (and a script with no
+        rate-modulating mode collapses to a single regime, reproducing
+        the stationary unrolling exactly).  At a regime boundary the
+        hardware timers restart: the engine re-unrolls the DAG for
+        ``wf_r`` with phase 0 at ``t0``.
+        """
+        bounds = self.boundaries()
+        end = max(end_s, self.duration_s)
+        out: List[List[object]] = []   # [t0, t1, wf_r]
+        for i, (t0, mode) in enumerate(bounds):
+            if t0 >= end - 1e-12:
+                break
+            t1 = bounds[i + 1][0] if i + 1 < len(bounds) else end
+            wf_m = get_mode(mode).transform_workflow(wf)
+            if out and out[-1][2].sensor_periods == wf_m.sensor_periods:
+                out[-1][1] = t1        # same rates: extend, don't re-anchor
+            else:
+                out.append([t0, t1, wf_m])
+        out[-1][1] = max(out[-1][1], end)
+        return [(t0, t1, wf_r) for t0, t1, wf_r in out]
+
+    def modulates_rates(self, wf: Workflow) -> bool:
+        """True when any mode switch in the script changes a sensor
+        period (i.e. the run needs piecewise re-unrolling)."""
+        return len(self.rate_regimes(wf, self.duration_s)) > 1
 
     def profiles_for(
         self, model: LatencyModel
@@ -298,6 +333,18 @@ BUNDLED_SCENARIOS: Dict[str, ScenarioScript] = {
             ModeSegment("highway", 0.6),
         ),
         dropouts=(SensorDropout("cam_multi", 0.8, 0.15),),
+    ),
+    # pure rate churn: cameras at 15 Hz before dawn, 30 Hz through the
+    # morning, 60 Hz in rush hour — every seam changes the hyper-period,
+    # so the engine re-unrolls piecewise and the runtime must swap to a
+    # table compiled for the new rates (the figS_rates benchmark)
+    "rate_churn": ScenarioScript(
+        name="rate_churn",
+        segments=(
+            ModeSegment("night", 0.6),
+            ModeSegment("urban", 0.6),
+            ModeSegment("rush_hour", 0.8),
+        ),
     ),
 }
 

@@ -7,9 +7,7 @@ load).  Crash-safe: writes to a temp name then renames.
 """
 from __future__ import annotations
 
-import json
 import os
-import shutil
 import tempfile
 from pathlib import Path
 from typing import Any, Dict, List, Optional

@@ -4,7 +4,7 @@ trick; see DESIGN.md §5 and the §Perf log)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..distribution.sharding import batch_specs, param_specs
+from ..distribution.sharding import param_specs
 from ..models import LM, init_params
 from ..models.config import ModelConfig
 from .checkpoint import CheckpointManager

@@ -1,0 +1,250 @@
+"""Per-mode sensor rates + piecewise hyper-period re-unrolling tests:
+workflow re-derivation, segment unrolling, seam integrity (no
+double-released or lost jobs), determinism, and the per-mode portfolio
+hyper-periods."""
+import numpy as np
+import pytest
+
+from repro.core.benchmark import make_ads_benchmark
+from repro.core.experiment import build_stack, make_policy
+from repro.core.hardware import simba_chip
+from repro.core.latency_model import LatencyModel
+from repro.core.runtime import SchedulePortfolio
+from repro.core.sim import SimConfig, Simulator
+from repro.core.workload import unroll_hyperperiod
+from repro.scenarios import (
+    MODES,
+    DrivingMode,
+    ScenarioScript,
+    ScenarioSpec,
+    default_generator,
+    get_mode,
+    get_scenario,
+    register_mode,
+    run_scenario,
+    sweep,
+)
+
+
+# ---------------------------------------------------------------------------
+# Workflow.with_sensor_rates
+# ---------------------------------------------------------------------------
+def test_with_sensor_rates_rederives_hyperperiod():
+    wf = make_ads_benchmark()
+    assert np.isclose(wf.hyper_period_s, 0.1)
+    wf2 = wf.with_sensor_rates({"cam_multi": 1.0 / 15.0})
+    assert np.isclose(wf2.tasks["cam_multi"].period_s, 1.0 / 15.0)
+    assert np.isclose(wf2.hyper_period_s, 0.2)
+    # untouched: the DAG, chains, and the original workflow
+    assert wf2.edges == wf.edges
+    assert [c.name for c in wf2.chains] == [c.name for c in wf.chains]
+    assert np.isclose(wf.tasks["cam_multi"].period_s, 1.0 / 30.0)
+
+
+def test_with_sensor_rates_identity_and_validation():
+    wf = make_ads_benchmark()
+    assert wf.with_sensor_rates({"cam_multi": 1.0 / 30.0}) is wf
+    assert wf.with_sensor_rates({}) is wf
+    with pytest.raises(ValueError):
+        wf.with_sensor_rates({"img_backbone": 0.1})   # not a sensor
+    with pytest.raises(ValueError):
+        wf.with_sensor_rates({"cam_multi": 0.0})
+
+
+# ---------------------------------------------------------------------------
+# segment unrolling
+# ---------------------------------------------------------------------------
+def test_unroll_segment_matches_default_on_one_hyperperiod():
+    wf = make_ads_benchmark()
+    assert unroll_hyperperiod(wf) == unroll_hyperperiod(
+        wf, 0.0, wf.hyper_period_s
+    )
+
+
+def test_unroll_segment_absolute_releases_and_phase():
+    wf = make_ads_benchmark()
+    insts = unroll_hyperperiod(wf, t0=1.0, t1=1.25)
+    assert all(1.0 - 1e-12 <= i.release_s < 1.25 for i in insts)
+    cam = sorted(i.release_s for i in insts if i.task == "cam_multi")
+    assert len(cam) == 8                      # 1.0 + k/30 < 1.25
+    assert np.allclose(np.diff(cam), 1.0 / 30.0)
+    # dependencies stay event-time consistent inside the segment
+    by_key = {(i.task, i.index): i for i in insts}
+    for i in insts:
+        for p in i.preds:
+            assert by_key[p].release_s <= i.release_s + 1e-9
+    shifted = unroll_hyperperiod(wf, t0=1.0, t1=1.25, phase_s=0.01)
+    cam_s = sorted(i.release_s for i in shifted if i.task == "cam_multi")
+    assert np.isclose(cam_s[0], 1.01)
+
+
+# ---------------------------------------------------------------------------
+# mode-level rate modulation
+# ---------------------------------------------------------------------------
+def test_bundled_modes_modulate_rates():
+    wf = make_ads_benchmark()
+    night = get_mode("night").transform_workflow(wf)
+    assert np.isclose(1.0 / night.tasks["cam_multi"].period_s, 15.0)
+    rush = get_mode("rush_hour").transform_workflow(wf)
+    assert np.isclose(1.0 / rush.tasks["cam_multi"].period_s, 60.0)
+    storm = get_mode("adverse_weather").transform_workflow(wf)
+    assert np.isclose(1.0 / storm.tasks["lidar"].period_s, 20.0)
+    # a rate-free mode returns the workflow untouched
+    assert get_mode("urban").transform_workflow(wf) is wf
+    # a typo'd sensor key fails fast instead of silently modulating nothing
+    bad = DrivingMode(name="typo", sensor_rate_hz={"camera": 60.0})
+    with pytest.raises(ValueError):
+        bad.transform_workflow(wf)
+
+
+def test_rate_regimes_merge_equal_rates():
+    wf = make_ads_benchmark()
+    # urban/highway modulate no rate: one regime despite a mode switch
+    s = ScenarioScript.parse("urban:0.5 highway:0.5")
+    regimes = s.rate_regimes(wf, 1.0)
+    assert len(regimes) == 1
+    assert regimes[0][:2] == (0.0, 1.0)
+    assert not s.modulates_rates(wf)
+    # a night seam re-anchors at 0.5
+    s2 = ScenarioScript.parse("urban:0.5 night:0.5")
+    regimes = s2.rate_regimes(wf, 1.0)
+    assert len(regimes) == 2
+    assert regimes[1][0] == 0.5
+    assert np.isclose(regimes[1][2].hyper_period_s, 0.2)
+    assert s2.modulates_rates(wf)
+
+
+# ---------------------------------------------------------------------------
+# seam integrity in the engine
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def cam24_mode():
+    """A mode with a non-integer rate ratio vs. the 30 Hz base camera
+    (30 -> 24 Hz: neither hyper-period divides the other)."""
+    register_mode(DrivingMode(
+        name="cam24", sensor_rate_hz={"cam_multi": 24.0},
+        description="test: 24 Hz cameras",
+    ), overwrite=True)
+    yield "cam24"
+    del MODES["cam24"]
+
+
+def _build_sim(script, seed=1, duration=1.0):
+    spec = ScenarioSpec(scenario=script, policy="ads_tile", replan=False,
+                        seed=seed)
+    wf, _hw, model, compiler = build_stack(spec)
+    sched = compiler.compile(model, wf)
+    return Simulator(
+        wf, model, sched, make_policy("ads_tile"),
+        SimConfig(duration_s=duration, seed=seed, scenario=script),
+    )
+
+
+def test_non_integer_rate_seam_no_double_or_lost_jobs(cam24_mode):
+    script = ScenarioScript.parse("urban:0.5 cam24:0.5")
+    sim = _build_sim(script)
+    cam = sorted(j.release for j in sim.jobs if j.task == "cam_multi")
+    # regime 1: k/30 in [0, 0.5) -> 15 releases; regime 2 re-anchors at
+    # 0.5: 0.5 + k/24 in [0.5, 1.0) -> 12 releases.  Exactly one release
+    # at the seam, none duplicated, none lost.
+    assert len(cam) == 15 + 12
+    assert len(set(round(r, 9) for r in cam)) == len(cam)
+    assert min(np.diff(cam)) > 1e-9
+    assert any(np.isclose(r, 0.5) for r in cam)
+    assert np.allclose(np.diff(cam[:15]), 1.0 / 30.0)
+    assert np.allclose(np.diff(cam[15:]), 1.0 / 24.0)
+    # the camera-gated DNN task follows the same piecewise release grid
+    flow = sorted(j.release for j in sim.jobs if j.task == "optical_flow")
+    assert flow == cam
+    # and the run completes with reconciling per-mode accounting
+    r = sim.run()
+    assert r.n_mode_switches == 1
+    assert (
+        sum(s.n_completed for s in r.mode_stats.values())
+        == sum(r.chain_count.values())
+    )
+
+
+def test_horizon_shorter_than_script_builds_no_future_regimes():
+    # a 0.2 s run over a 2.0 s script must not materialise jobs for
+    # regimes (or cycles) beyond the horizon
+    sim = _build_sim(get_scenario("rate_churn"), duration=0.2)
+    assert len(sim._regimes) == 1            # night regime only
+    assert max(j.release for j in sim.jobs) < 0.2
+    r = sim.run()
+    assert r.n_mode_switches == 0            # no seam inside the horizon
+
+
+def test_piecewise_reunroll_deterministic():
+    spec = ScenarioSpec(scenario=get_scenario("rate_churn"),
+                        policy="ads_tile", seed=7)
+    a = run_scenario(spec)
+    b = run_scenario(spec)
+    assert a.effective_frac == b.effective_frac
+    assert a.realloc_frac == b.realloc_frac
+    assert a.chain_violations == b.chain_violations
+    assert {m: s.n_completed for m, s in a.mode_stats.items()} == \
+           {m: s.n_completed for m, s in b.mode_stats.items()}
+
+
+def test_rate_churn_per_mode_accounting_and_replanning():
+    """Acceptance: a scenario whose modes change sensor rates runs
+    end-to-end — the engine re-unrolls at each seam, every regime
+    completes chains, and per-mode counts reconcile with the global
+    chain accounting."""
+    scen = get_scenario("rate_churn")
+    r = run_scenario(ScenarioSpec(scenario=scen, policy="ads_tile",
+                                  replan=True, seed=3))
+    assert r.n_mode_switches == len(scen.segments) - 1
+    assert set(r.mode_stats) == set(scen.modes())
+    assert np.isclose(sum(s.span_s for s in r.mode_stats.values()),
+                      scen.duration_s)
+    for s in r.mode_stats.values():
+        assert s.n_completed > 0
+    assert (
+        sum(s.n_completed for s in r.mode_stats.values())
+        == sum(r.chain_count.values())
+    )
+    # the camera upclock must actually raise the completion *rate* in
+    # rush_hour vs night (60 Hz vs 15 Hz source over equal-ish spans)
+    per_s = {m: s.n_completed / s.span_s for m, s in r.mode_stats.items()}
+    assert per_s["rush_hour"] > per_s["night"]
+
+
+def test_rate_churn_ads_tile_bounds_realloc_waste():
+    """Acceptance: under rate churn ADS-Tile's gated reallocation beats
+    the work-conserving baseline on realloc waste."""
+    scen = get_scenario("rate_churn")
+    waste = {}
+    for policy in ("ads_tile", "tp_driven"):
+        r = run_scenario(ScenarioSpec(scenario=scen, policy=policy,
+                                      replan=True, seed=1))
+        waste[policy] = r.realloc_frac
+    assert waste["ads_tile"] < waste["tp_driven"]
+
+
+def test_sweep_ships_custom_modes_to_spawn_workers(cam24_mode):
+    """Pool workers re-import a fresh mode registry; specs must carry
+    custom mode definitions so rate-modulating custom modes survive."""
+    gen = default_generator(
+        transitions={"urban": {"cam24": 1.0}, "cam24": {"urban": 1.0}},
+        mean_dwell_s={"urban": 0.3, "cam24": 0.3},
+    )
+    rows = sweep(2, policies=("ads_tile",), duration_s=0.6, seed=5,
+                 jobs=2, generator=gen)
+    assert len(rows) == 2
+    assert all(0.0 <= r["violation_rate"] <= 1.0 for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# per-mode schedule portfolio
+# ---------------------------------------------------------------------------
+def test_portfolio_compiles_per_mode_hyperperiod():
+    wf = make_ads_benchmark()
+    model = LatencyModel.from_workflow(wf, simba_chip(400))
+    pf = SchedulePortfolio.compile(
+        model, wf, {m: get_mode(m) for m in ("urban", "night")},
+    )
+    assert np.isclose(pf.schedules["urban"].meta["hyper_period_s"], 0.1)
+    assert np.isclose(pf.schedules["night"].meta["hyper_period_s"], 0.2)
+    assert pf.schedules["night"].meta["mode"] == "night"

@@ -87,7 +87,7 @@ def test_trainer_resume_determinism(tmp_path):
         return t.fit(data)
 
     full = run(6, str(tmp_path / "a"))
-    part = run(4, str(tmp_path / "b"))          # "crash" after step 4
+    run(4, str(tmp_path / "b"))                 # "crash" after step 4
     resumed = run(6, str(tmp_path / "b"), resume=True)
     f = {r["step"]: r["loss"] for r in full["history"]}
     r = {r["step"]: r["loss"] for r in resumed["history"]}
