@@ -22,6 +22,7 @@ import dataclasses
 from repro.scenarios import (
     ScenarioSpec,
     aggregate_sweep,
+    build_trace,
     compile_portfolio,
     get_scenario,
     run_scenario,
@@ -35,13 +36,18 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
     # -- part 1: bundled scenarios, replan vs pinned --------------------
     for name in ("calm_to_rush", "commute", "night_storm"):
         scen = get_scenario(name)
+        # one sampled trace per scenario: every policy/replan variant
+        # sees identical per-job draws (and pays no re-sampling)
+        trace = build_trace(ScenarioSpec(scenario=scen, policy="ads_tile",
+                                         seed=seed))
         for policy in ("ads_tile", "tp_driven"):
             # one portfolio per (scenario, policy): the replanned and
             # pinned variants start from the identical table
             base = ScenarioSpec(scenario=scen, policy=policy, seed=seed)
             base = dataclasses.replace(base, portfolio=compile_portfolio(base))
             for replan in (True, False):
-                r = run_scenario(dataclasses.replace(base, replan=replan))
+                r = run_scenario(dataclasses.replace(base, replan=replan),
+                                 trace=trace)
                 per_mode = ";".join(
                     f"{m}_viol={s.violation_rate:.4f}"
                     for m, s in sorted(r.mode_stats.items())

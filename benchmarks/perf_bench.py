@@ -1,0 +1,138 @@
+"""Perf — simulator performance benchmark (jobs/s + sweep wall-clock).
+
+Tracks the engine's speed headline over time so perf regressions are
+visible in CI artifacts (``BENCH_sim.json`` via ``benchmarks.run
+--out``).  Three measurements:
+
+1. **Trace/job construction** — Simulator builds per second on a
+   standard heavy workload (cockpit_replicas=4, 2 s horizon), both the
+   single-build pattern and the paired-sweep pattern (one sampled
+   trace shared across two policies, the steady state of ``sweep()``).
+2. **Sampling kernel** — the batched counter-based trace sampler vs
+   the legacy per-job scalar ``RandomState`` path on the same skeleton
+   (:func:`repro.core.sim.trace.scalar_reference_trace`), a
+   machine-independent speedup ratio.
+3. **End-to-end sweep** — wall-clock for a pinned Monte-Carlo sweep
+   (fixed 6-mode Markov generator, so the workload stays comparable as
+   bundled defaults evolve), the figS_scenarios fleet view.
+
+``PREPR_*`` constants are the pre-PR numbers measured on the reference
+dev container when this benchmark was introduced (engine @ b7c00aa:
+scalar per-job sampling, no skeleton cache); ``speedup_vs_prepr`` is
+only meaningful on comparable hardware and is recorded for the PR's
+acceptance trail, not as a portable metric.
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+from repro.core.experiment import ExperimentSpec, build_stack, make_policy
+from repro.core.sim import SimConfig, Simulator
+from repro.core.sim.trace import (
+    build_skeleton,
+    sample_trace,
+    scalar_reference_trace,
+)
+from repro.scenarios import sweep
+from repro.scenarios.script import MarkovScenarioGenerator
+
+from .common import emit
+
+#: pre-PR reference numbers (dev container, engine @ b7c00aa)
+PREPR_BUILD_JOBS_PER_S = 60_882.0
+PREPR_SWEEP_8X2_S = 3.430
+
+#: pinned 6-mode generator: the e2e workload must not drift when the
+#: bundled DEFAULT_TRANSITIONS change
+PERF_TRANSITIONS = {
+    "urban": {"highway": 0.30, "parking": 0.13, "adverse_weather": 0.14,
+              "night": 0.09, "rush_hour": 0.12, "urban": 0.22},
+    "highway": {"urban": 0.40, "adverse_weather": 0.15, "night": 0.10,
+                "rush_hour": 0.05, "highway": 0.30},
+    "parking": {"urban": 0.90, "parking": 0.10},
+    "adverse_weather": {"urban": 0.50, "highway": 0.30,
+                        "adverse_weather": 0.20},
+    "night": {"urban": 0.40, "highway": 0.40, "night": 0.20},
+    "rush_hour": {"urban": 0.55, "highway": 0.20, "rush_hour": 0.25},
+}
+PERF_DWELL = {"urban": 0.8, "highway": 1.0, "parking": 0.5,
+              "adverse_weather": 0.7, "night": 0.9, "rush_hour": 0.6}
+
+
+def _build_benchmark(duration: float, seed: int) -> None:
+    spec = ExperimentSpec(policy="ads_tile", tiles=400, cockpit_replicas=4,
+                          duration_s=2.0, seed=seed)
+    wf, _hw, model, compiler = build_stack(spec)
+    sched = compiler.compile(model, wf)
+    pol_a, pol_b = make_policy("ads_tile"), make_policy("tp_driven")
+    reps = max(3, int(round(20 * duration)))
+
+    # warm the skeleton/unroll caches (steady state of any sweep)
+    Simulator(wf, model, sched, pol_a, SimConfig(duration_s=2.0, seed=0))
+
+    t0 = time.perf_counter()
+    n = 0
+    for i in range(reps):
+        n += len(Simulator(wf, model, sched, pol_a,
+                           SimConfig(duration_s=2.0, seed=seed + i)).jobs)
+    dt = time.perf_counter() - t0
+    jps = n / dt
+    emit("perf_build_single", dt / reps * 1e6,
+         f"jobs_per_s={jps:.0f};"
+         f"prepr_ref={PREPR_BUILD_JOBS_PER_S:.0f};"
+         f"speedup_vs_prepr={jps / PREPR_BUILD_JOBS_PER_S:.2f}")
+
+    # paired-sweep pattern: one trace, two policies
+    t0 = time.perf_counter()
+    n = 0
+    for i in range(reps):
+        skel = build_skeleton(wf, None, 2.0)
+        tr = sample_trace(skel, model, None, seed + i)
+        for pol in (pol_a, pol_b):
+            n += len(Simulator(wf, model, sched, pol,
+                               SimConfig(duration_s=2.0, seed=seed + i,
+                                         trace=tr)).jobs)
+    dt = time.perf_counter() - t0
+    jps = n / dt
+    emit("perf_build_paired", dt / (2 * reps) * 1e6,
+         f"jobs_per_s={jps:.0f};"
+         f"speedup_vs_prepr={jps / PREPR_BUILD_JOBS_PER_S:.2f}")
+
+    # sampling kernel: batched vs legacy scalar path, same skeleton
+    skel = build_skeleton(wf, None, 2.0)
+    t0 = time.perf_counter()
+    for i in range(reps):
+        sample_trace(skel, model, None, seed + i)
+    dt_batched = time.perf_counter() - t0
+    scalar_reps = max(1, reps // 4)
+    t0 = time.perf_counter()
+    for i in range(scalar_reps):
+        scalar_reference_trace(skel, model, None, seed + i)
+    dt_scalar = (time.perf_counter() - t0) * reps / scalar_reps
+    emit("perf_sample_batched", dt_batched / reps * 1e6,
+         f"jobs_per_s={skel.n * reps / dt_batched:.0f};"
+         f"scalar_ref_jobs_per_s={skel.n * reps / dt_scalar:.0f};"
+         f"speedup_vs_scalar={dt_scalar / dt_batched:.1f}")
+
+
+def _sweep_benchmark(duration: float, seed: int) -> None:
+    gen = MarkovScenarioGenerator(transitions=PERF_TRANSITIONS,
+                                  mean_dwell_s=PERF_DWELL)
+    n = max(2, int(round(8 * duration)))
+    gc.collect()
+    t0 = time.perf_counter()
+    rows = sweep(n, policies=("ads_tile", "tp_driven"), duration_s=2.0,
+                 seed=seed, jobs=1, generator=gen)
+    dt = time.perf_counter() - t0
+    derived = f"runs={len(rows)};seconds={dt:.3f}"
+    if n == 8:
+        # directly comparable to the recorded pre-PR wall-clock
+        derived += (f";prepr_ref_s={PREPR_SWEEP_8X2_S:.3f}"
+                    f";speedup_vs_prepr={PREPR_SWEEP_8X2_S / dt:.2f}")
+    emit("perf_sweep_e2e", dt / max(len(rows), 1) * 1e6, derived)
+
+
+def run(duration: float = 1.0, seed: int = 1) -> None:
+    _build_benchmark(duration, seed)
+    _sweep_benchmark(duration, seed)

@@ -28,6 +28,8 @@ class CyclicPolicy(Policy):
 
     #: hard per-task budget enforcement
     elastic = False
+    #: on_point ignores "chunk"; let the engine skip those events
+    uses_chunk_points = False
 
     def setup(self, sim: Simulator) -> None:
         pass

@@ -25,12 +25,21 @@ __all__ = ["TpDrivenPolicy"]
 class TpDrivenPolicy(Policy):
     name = "tp_driven"
 
+    #: on_point ignores "chunk"; let the engine skip those events
+    uses_chunk_points = False
+
     def __init__(self, drop_on_subddl: bool = False):
         #: Fig. 12 'hard' variant: drop a job once its sub-deadline passed
         self.drop_on_subddl = drop_on_subddl
+        self._cands: dict = {}
 
     def setup(self, sim: Simulator) -> None:
-        pass
+        # per-task DoP candidate cache (hot: every reallocation pass
+        # walks the candidate ladder for every queued job)
+        self._cands = {
+            name: t.dop_candidates()
+            for name, t in sim.wf.tasks.items() if not t.is_sensor
+        }
 
     # ------------------------------------------------------------------
     def _reallocate(self, sim: Simulator, partition: int, now: float) -> None:
@@ -50,15 +59,18 @@ class TpDrivenPolicy(Policy):
         # deadline; urgent jobs first.
         alloc: Dict[int, int] = {}
         left = cap
+        cands_of = self._cands
         for job in queue:
-            cands = sim.wf.tasks[job.task].dop_candidates()
+            cands = cands_of[job.task]
             slack = job.sub_ddl - now
+            rem = 1.0 - job.progress
+            durs = job.duration_ladder(cands, tf)
             pick = 0
-            for c in cands:
+            for c, d in zip(cands, durs):
                 if c > left:
                     break
                 pick = c
-                if job.remaining(c, tf) <= slack:
+                if rem * d <= slack:
                     break
             alloc[job.jid] = pick
             left -= pick
@@ -69,13 +81,15 @@ class TpDrivenPolicy(Policy):
         while left > 0 and bumped:
             bumped = False
             for job in queue:
-                cands = sim.wf.tasks[job.task].dop_candidates()
+                cands = cands_of[job.task]
                 cur = alloc.get(job.jid, 0)
-                nxt = next((c for c in cands if c > cur), None)
-                if nxt is not None and nxt - cur <= left:
-                    alloc[job.jid] = nxt
-                    left -= nxt - cur
-                    bumped = True
+                for c in cands:  # next candidate above cur (inline: hot)
+                    if c > cur:
+                        if c - cur <= left:
+                            alloc[job.jid] = c
+                            left -= c - cur
+                            bumped = True
+                        break
 
         resize: Dict[int, int] = {}
         starts: Dict[int, int] = {}

@@ -47,12 +47,11 @@ def _best_latency_under_cap(
     """(argmin-latency DoP <= cap, its latency); (None, inf) if no
     candidate fits the cap."""
     t = wf.tasks[task]
-    prof = model.profiles[task]
     best_c, best_l = None, float("inf")
     for c in t.dop_candidates():
         if c > cap:
             continue
-        lat = prof.latency_bound(q, c, model.hw.tile_flops)
+        lat = model.bound(task, q, c)  # (task, q, c)-cached
         if lat < best_l:
             best_c, best_l = c, lat
     return best_c, best_l
@@ -86,7 +85,7 @@ def solve_subchain(
     shapes: Dict[str, Tuple[int, float]] = {}
     budget = d_rem
     for s in sensors:
-        l = model.profiles[s].latency_bound(q, 0, model.hw.tile_flops)
+        l = model.bound(s, q, 0)
         shapes[s] = (0, l)
         budget -= l
 

@@ -118,32 +118,51 @@ class _Scorer:
             if u in self.index and v in self.index
         ]
         self.norm_cap = max(1.0, float(self.dop_vec.sum()))
+        #: bin -> (capacity, busy) memo: the greedy merge + local
+        #: search re-evaluate mostly-unchanged partitionings, so the
+        #: same bins recur thousands of times per compile
+        self._stats_cache: Dict[tuple, Tuple[int, float]] = {}
 
     #: safety margin on sustained demand (runtime jitter headroom)
     SUSTAIN_MARGIN = 1.15
 
+    def _bin_stats(self, b: List[str]) -> Tuple[int, float]:
+        """(capacity, busy tile-seconds) of one bin — the expensive
+        per-window demand aggregation, memoized on the bin's member set
+        and shared by :meth:`capacities` and :meth:`score`."""
+        key = tuple(sorted(b))
+        hit = self._stats_cache.get(key)
+        if hit is not None:
+            return hit
+        idx = sorted(self.index[t] for t in b)
+        if not idx:
+            self._stats_cache[key] = (0, 0.0)
+            return 0, 0.0
+        col = self.demand[idx].sum(axis=0)
+        peak = float(col.max()) if len(self.dur) else 0.0
+        peak = max(peak, float(self.dop_vec[idx].max()))
+        # sustained tile demand: the bin must carry its members' total
+        # tile-seconds per hyper-period even when planned offsets
+        # interleave perfectly on paper but jitter at runtime
+        busy = float((col * self.dur).sum())
+        sustained = self.SUSTAIN_MARGIN * busy / self.thp
+        out = (int(round(max(peak, sustained))), busy)
+        self._stats_cache[key] = out
+        return out
+
     def capacities(self, bins: List[List[str]]):
-        caps = []
-        for b in bins:
-            idx = [self.index[t] for t in b]
-            if not idx:
-                caps.append(0)
-                continue
-            peak = float(self.demand[idx].sum(axis=0).max()) if len(self.dur) else 0.0
-            peak = max(peak, float(self.dop_vec[idx].max()))
-            # sustained tile demand: the bin must carry its members' total
-            # tile-seconds per hyper-period even when planned offsets
-            # interleave perfectly on paper but jitter at runtime
-            busy = float((self.demand[idx].sum(axis=0) * self.dur).sum())
-            sustained = self.SUSTAIN_MARGIN * busy / self.thp
-            caps.append(int(round(max(peak, sustained))))
-        return caps
+        return [self._bin_stats(b)[0] for b in bins]
 
     def score(
         self, bins: List[List[str]], w: Tuple[float, float, float]
     ) -> Tuple[float, List[int]]:
         w1, w2, w3 = w
-        caps = self.capacities(bins)
+        caps: List[int] = []
+        busys: List[float] = []
+        for b in bins:
+            cap, busy = self._bin_stats(b)
+            caps.append(cap)
+            busys.append(busy)
 
         where = {}
         for s, b in enumerate(bins):
@@ -151,14 +170,10 @@ class _Scorer:
                 where[self.index[t]] = s
         affinity = sum(1 for u, v in self.edges if where[u] == where[v])
 
-        utils = []
-        for b, cap in zip(bins, caps):
-            if cap == 0:
-                utils.append(0.0)
-                continue
-            idx = [self.index[t] for t in b]
-            busy = float((self.demand[idx].sum(axis=0) * self.dur).sum())
-            utils.append(busy / (cap * self.thp))
+        utils = [
+            busy / (cap * self.thp) if cap else 0.0
+            for cap, busy in zip(caps, busys)
+        ]
         balance = (max(utils) - min(utils)) if utils else 0.0
         # capacity-spread component: merged bins of similar size are
         # preferred over one mega-bin plus singletons (isolation domains

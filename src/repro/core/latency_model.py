@@ -43,6 +43,7 @@ __all__ = [
     "ShiftedExponential",
     "TaskLatencyProfile",
     "LatencyModel",
+    "ndtri",
     "prune_dop_candidates",
     "chain_tail_composition",
 ]
@@ -88,6 +89,16 @@ class LogNormal:
         z = float(_ndtri(q))
         return math.exp(self.mu + self.sigma * z)
 
+    def quantiles(self, q: "np.ndarray") -> "np.ndarray":
+        """Vectorized :meth:`quantile` over an array of probabilities
+        (the batched trace generator's inverse-CDF sampling path)."""
+        q = np.asarray(q, dtype=np.float64)
+        if self.mean == 0:
+            return np.zeros_like(q)
+        if self.sigma == 0.0:
+            return np.full_like(q, self.mean)
+        return np.exp(self.mu + self.sigma * ndtri(q))
+
     def sample(self, key: jax.Array, shape: Tuple[int, ...] = ()) -> jax.Array:
         if self.mean == 0:
             return jnp.zeros(shape)
@@ -107,6 +118,13 @@ class ShiftedExponential:
             return self.base
         return self.base - math.log(max(1.0 - q, 1e-300)) / self.rate
 
+    def quantiles(self, q: "np.ndarray") -> "np.ndarray":
+        """Vectorized :meth:`quantile` over an array of probabilities."""
+        q = np.asarray(q, dtype=np.float64)
+        if self.rate <= 0:
+            return np.full_like(q, self.base)
+        return self.base - np.log(np.maximum(1.0 - q, 1e-300)) / self.rate
+
     @property
     def mean(self) -> float:
         return self.base + (1.0 / self.rate if self.rate > 0 else 0.0)
@@ -116,33 +134,75 @@ class ShiftedExponential:
         return self.base + (e / self.rate if self.rate > 0 else 0.0)
 
 
-def _ndtri(q: float) -> float:
-    """Inverse standard-normal CDF (Acklam's rational approximation)."""
-    if not 0.0 < q < 1.0:
-        if q <= 0.0:
-            return -math.inf
-        return math.inf
-    a = [-3.969683028665376e01, 2.209460984245205e02, -2.759285104469687e02,
-         1.383577518672690e02, -3.066479806614716e01, 2.506628277459239e00]
-    b = [-5.447609879822406e01, 1.615858368580409e02, -1.556989798598866e02,
-         6.680131188771972e01, -1.328068155288572e01]
-    c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e00,
-         -2.549732539343734e00, 4.374664141464968e00, 2.938163982698783e00]
-    d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e00,
-         3.754408661907416e00]
-    plow, phigh = 0.02425, 1 - 0.02425
-    if q < plow:
-        x = math.sqrt(-2 * math.log(q))
-        return (((((c[0] * x + c[1]) * x + c[2]) * x + c[3]) * x + c[4]) * x + c[5]) / \
-               ((((d[0] * x + d[1]) * x + d[2]) * x + d[3]) * x + 1)
-    if q > phigh:
-        x = math.sqrt(-2 * math.log(1 - q))
-        return -(((((c[0] * x + c[1]) * x + c[2]) * x + c[3]) * x + c[4]) * x + c[5]) / \
-               ((((d[0] * x + d[1]) * x + d[2]) * x + d[3]) * x + 1)
+# Acklam inverse-normal-CDF coefficients, shared by the scalar fast
+# path and the vectorized array path (one implementation of the
+# rational approximation; two evaluation strategies).
+_NDTRI_A = (-3.969683028665376e01, 2.209460984245205e02, -2.759285104469687e02,
+            1.383577518672690e02, -3.066479806614716e01, 2.506628277459239e00)
+_NDTRI_B = (-5.447609879822406e01, 1.615858368580409e02, -1.556989798598866e02,
+            6.680131188771972e01, -1.328068155288572e01)
+_NDTRI_C = (-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e00,
+            -2.549732539343734e00, 4.374664141464968e00, 2.938163982698783e00)
+_NDTRI_D = (7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e00,
+            3.754408661907416e00)
+_NDTRI_PLOW = 0.02425
+
+
+def _ndtri_tail(x):
+    """Tail branch of Acklam's approximation in ``x = sqrt(-2 ln p)``
+    (works on floats and on NumPy arrays alike)."""
+    c, d = _NDTRI_C, _NDTRI_D
+    return (((((c[0] * x + c[1]) * x + c[2]) * x + c[3]) * x + c[4]) * x + c[5]) / \
+           ((((d[0] * x + d[1]) * x + d[2]) * x + d[3]) * x + 1)
+
+
+def _ndtri_central(q):
+    """Central branch of Acklam's approximation (floats or arrays)."""
+    a, b = _NDTRI_A, _NDTRI_B
     x = q - 0.5
     r = x * x
     return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * x / \
            (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+
+
+def ndtri(q):
+    """Inverse standard-normal CDF (Acklam's rational approximation).
+
+    Accepts a float (returned as ``float``, the offline solvers' scalar
+    path) or a NumPy array (returned as ``ndarray``, the batched
+    trace-generation path) — both evaluate the same branch polynomials.
+    ``q <= 0`` maps to ``-inf`` and ``q >= 1`` to ``+inf``.
+    """
+    if np.ndim(q) == 0:
+        q = float(q)
+        if not 0.0 < q < 1.0:
+            return -math.inf if q <= 0.0 else math.inf
+        if q < _NDTRI_PLOW:
+            return float(_ndtri_tail(math.sqrt(-2 * math.log(q))))
+        if q > 1 - _NDTRI_PLOW:
+            return float(-_ndtri_tail(math.sqrt(-2 * math.log(1 - q))))
+        return float(_ndtri_central(q))
+
+    q = np.asarray(q, dtype=np.float64)
+    out = np.empty_like(q)
+    lo = q <= 0.0
+    hi = q >= 1.0
+    low_tail = (q < _NDTRI_PLOW) & ~lo
+    high_tail = (q > 1 - _NDTRI_PLOW) & ~hi
+    central = ~(lo | hi | low_tail | high_tail)
+    out[lo] = -np.inf
+    out[hi] = np.inf
+    if low_tail.any():
+        out[low_tail] = _ndtri_tail(np.sqrt(-2.0 * np.log(q[low_tail])))
+    if high_tail.any():
+        out[high_tail] = -_ndtri_tail(np.sqrt(-2.0 * np.log(1.0 - q[high_tail])))
+    if central.any():
+        out[central] = _ndtri_central(q[central])
+    return out
+
+
+#: backwards-compatible scalar alias (existing callers import `_ndtri`)
+_ndtri = ndtri
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +275,12 @@ class LatencyModel:
     def __init__(self, profiles: Mapping[str, TaskLatencyProfile], hw: HardwareModel):
         self.profiles: Dict[str, TaskLatencyProfile] = dict(profiles)
         self.hw = hw
+        # (task, q, c) -> L_v(q, c): profiles are frozen, so bounds are
+        # immutable per model.  best_dop / min_dop_for_budget / the GHA
+        # phases and the portfolio q-relaxation ladder recompute the
+        # same bounds many times per compile; the cache makes repeats a
+        # dict hit.
+        self._bound_cache: Dict[Tuple[str, float, int], float] = {}
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -263,25 +329,29 @@ class LatencyModel:
 
     # -- queries -----------------------------------------------------------
     def bound(self, task: str, q: float, c: int) -> float:
-        return self.profiles[task].latency_bound(q, c, self.hw.tile_flops)
+        """Cached L_v(q, c) (Eq. 1); see ``_bound_cache``."""
+        key = (task, q, c)
+        hit = self._bound_cache.get(key)
+        if hit is None:
+            hit = self.profiles[task].latency_bound(q, c, self.hw.tile_flops)
+            self._bound_cache[key] = hit
+        return hit
 
     def mean(self, task: str, c: int) -> float:
         return self.profiles[task].mean_latency(c, self.hw.tile_flops)
 
     def best_dop(self, task: Task, q: float, cap: Optional[int] = None) -> int:
         """Smallest-latency DoP among the (pruned) candidates."""
-        prof = self.profiles[task.name]
         cands = task.dop_candidates(cap)
-        return min(cands, key=lambda c: prof.latency_bound(q, c, self.hw.tile_flops))
+        return min(cands, key=lambda c: self.bound(task.name, q, c))
 
     def min_dop_for_budget(
         self, task: Task, q: float, budget_s: float, cap: Optional[int] = None
     ) -> Optional[int]:
         """Smallest DoP whose q-quantile bound fits in ``budget_s``
         (the FitQuota primitive of Alg. 2); None if infeasible."""
-        prof = self.profiles[task.name]
         for c in task.dop_candidates(cap):
-            if prof.latency_bound(q, c, self.hw.tile_flops) <= budget_s:
+            if self.bound(task.name, q, c) <= budget_s:
                 return c
         return None
 

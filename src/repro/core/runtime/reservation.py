@@ -30,11 +30,13 @@ def fit_quota(
     predicted finish meets ``target_t``; if none meets it, the largest
     candidate that fits ``cap`` (best effort); 0 if nothing fits."""
     slack = target_t - now
+    rem = 1.0 - job.progress
+    durs = job.duration_ladder(tuple(candidates), tile_flops)
     pick = 0
-    for c in candidates:
+    for c, d in zip(candidates, durs):
         if c > cap:
             break
         pick = c
-        if job.remaining(c, tile_flops) <= slack:
+        if rem * d <= slack:
             return c
     return pick

@@ -48,9 +48,18 @@ class AdsTilePolicy(Policy):
         #: reallocation fires only if benefit > gate * partition stall cost
         self.realloc_gate = realloc_gate
         self._down: Dict[str, float] = {}
+        self._cands: Dict[str, tuple] = {}
+        self._cmax: Dict[str, int] = {}
 
     # ------------------------------------------------------------------
     def setup(self, sim: Simulator) -> None:
+        # per-task DoP candidate cache (hot: FitQuota walks the ladder
+        # at every scheduling point)
+        self._cands = {
+            name: t.dop_candidates()
+            for name, t in sim.wf.tasks.items() if not t.is_sensor
+        }
+        self._cmax = {name: max(c) for name, c in self._cands.items()}
         # downstream budget per task: tightest over chains (Getddl's
         # relative-timing data, precomputed offline)
         sched = sim.schedule
@@ -77,7 +86,7 @@ class AdsTilePolicy(Policy):
         return max(job.sub_ddl, eff)
 
     def _quota(self, sim: Simulator, job: Job, cap: int, now: float) -> int:
-        cands = sim.wf.tasks[job.task].dop_candidates()
+        cands = self._cands[job.task]
         if not self.quota_control:
             # degenerate: latency-greedy (largest candidate fitting cap)
             fit = [c for c in cands if c <= cap]
@@ -98,12 +107,14 @@ class AdsTilePolicy(Policy):
 
         # -- fast path: start ready jobs on free tiles at their quota
         #    (a job past its target still starts — fit_quota degrades to
-        #    the fastest candidate, minimising tardiness) ----------------
+        #    the fastest candidate, minimising tardiness).  ``ready``
+        #    only shrinks, so one sort serves every restart pass.
+        ready.sort(key=lambda j: (j.sub_ddl, j.jid))
         started = True
         while started:
             started = False
             free = part.free()
-            for job in sorted(ready, key=lambda j: (j.sub_ddl, j.jid)):
+            for job in ready:
                 c = self._quota(sim, job, free, now)
                 if c > 0:
                     sim.start_job(job, c)
@@ -121,12 +132,19 @@ class AdsTilePolicy(Policy):
             if self._quota(sim, j, part.capacity, now) > free
         ]
         at_risk = []
+        slack_sharing, down = self.slack_sharing, self._down
+        cmax = self._cmax
         for job in running:
-            tgt = self._target(job)
+            if cmax[job.task] <= job.dop:
+                continue  # already at the largest candidate: cannot grow
+            # _target() inlined (hot: every running job, every point)
+            tgt = job.sub_ddl
+            if slack_sharing:
+                eff = job.e2e_ddl - down.get(job.task, 0.0)
+                if eff > tgt:
+                    tgt = eff
             if now + job.remaining(job.dop, tf) > tgt:
-                cands = sim.wf.tasks[job.task].dop_candidates()
-                if any(c > job.dop for c in cands):
-                    at_risk.append(job)
+                at_risk.append(job)
         if not blocked and not at_risk:
             return
 

@@ -8,6 +8,7 @@ distributions under the F1/F2 variation factors.
 """
 from .engine import Job, JobState, ModeStats, Simulator, SimConfig, SimReport
 from .policy import Policy
+from .trace import Trace, build_skeleton, counter_uniforms, sample_trace
 
 __all__ = [
     "Job",
@@ -17,4 +18,8 @@ __all__ = [
     "SimConfig",
     "SimReport",
     "Policy",
+    "Trace",
+    "build_skeleton",
+    "counter_uniforms",
+    "sample_trace",
 ]

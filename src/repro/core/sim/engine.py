@@ -31,15 +31,16 @@ import dataclasses
 import enum
 import heapq
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..gha.schedule import Schedule
 from ..hardware import HardwareModel
 from ..latency_model import LatencyModel
-from ..workload import Workflow, unroll_hyperperiod
+from ..workload import Workflow
 from .policy import Policy
+from .trace import Trace, build_skeleton, sample_trace
 
 __all__ = [
     "Job", "JobState", "ModeStats", "SimConfig", "Simulator", "SimReport",
@@ -54,7 +55,10 @@ class JobState(enum.Enum):
     DROPPED = 4
 
 
-@dataclasses.dataclass(eq=False)  # identity hash: jobs live in ready sets
+#  - eq=False: identity hash, jobs live in ready sets
+#  - slots=True: ~2x faster construction (the warm-build hot loop) and
+#    faster field access everywhere in the event loop
+@dataclasses.dataclass(eq=False, slots=True)
 class Job:
     jid: int
     task: str
@@ -71,7 +75,7 @@ class Job:
     e2e_ddl: float                  # tightest E2E deadline through this task
     plan_dop: int                   # offline c_v
     deps_remaining: int = 0
-    succs: List[int] = dataclasses.field(default_factory=list)
+    succs: Sequence[int] = ()       # skeleton-shared tuple; never mutated
 
     state: JobState = JobState.PENDING
     progress: float = 0.0
@@ -85,26 +89,78 @@ class Job:
     degraded: bool = False          # an upstream job was dropped
     n_resizes: int = 0
     drop_at_release: bool = False   # scenario sensor dropout window
+    #: DoP -> total duration memo: policies re-evaluate the same few
+    #: candidate durations at every scheduling point (event-loop fast
+    #: path; work/io/sync are fixed once sampled).  Lazily created so
+    #: job construction does not allocate a dict per job.
+    _dur: Optional[Dict[int, float]] = dataclasses.field(
+        default=None, repr=False
+    )
+    #: (candidate tuple, durations tuple) memo for the policies'
+    #: candidate-ladder walks; see :meth:`duration_ladder`
+    _ladder: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
     def duration(self, c: int, tile_flops: float) -> float:
         if self.is_sensor:
             return self.io_s  # sensor latency pre-sampled into io_s
         c = max(int(c), 1)
-        return (
-            self.work_flops / (c * tile_flops)
-            + self.io_s
-            + self.sync_s * (c - 1)
-        )
+        memo = self._dur
+        if memo is None:
+            memo = self._dur = {}
+        d = memo.get(c)
+        if d is None:
+            d = (
+                self.work_flops / (c * tile_flops)
+                + self.io_s
+                + self.sync_s * (c - 1)
+            )
+            memo[c] = d
+        return d
 
     def remaining(self, c: int, tile_flops: float) -> float:
-        return (1.0 - self.progress) * self.duration(c, tile_flops)
+        # duration() inlined: this runs per candidate at every
+        # scheduling point and the extra call frame is measurable
+        if self.is_sensor:
+            return (1.0 - self.progress) * self.io_s
+        c = max(int(c), 1)
+        memo = self._dur
+        if memo is None:
+            memo = self._dur = {}
+        d = memo.get(c)
+        if d is None:
+            d = (
+                self.work_flops / (c * tile_flops)
+                + self.io_s
+                + self.sync_s * (c - 1)
+            )
+            memo[c] = d
+        return (1.0 - self.progress) * d
+
+    def duration_ladder(self, cands: tuple, tile_flops: float) -> tuple:
+        """Durations for a whole DoP-candidate tuple, memoized on the
+        tuple's identity.  Policies walk this ladder at every
+        scheduling point (FitQuota, the EDF quota pass); per-candidate
+        ``remaining()`` calls were the hottest line of a Monte-Carlo
+        sweep.  Callers must pass the *same* tuple object per task
+        (the policies' per-task candidate caches do)."""
+        lad = self._ladder
+        if lad is None or lad[0] is not cands:
+            lad = self._ladder = (
+                cands,
+                tuple(self.duration(c, tile_flops) for c in cands),
+            )
+        return lad[1]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Partition:
     idx: int
     capacity: int
     running: Dict[int, int] = dataclasses.field(default_factory=dict)  # jid -> dop
+    #: running total of sum(running.values()); maintained incrementally
+    #: at every mutation of ``running`` (event-loop fast path —
+    #: ``free``/``allocated`` are called at every scheduling point)
+    alloc: int = 0
     stalled: bool = False
     stall_end: float = 0.0
     last_t: float = 0.0
@@ -116,10 +172,10 @@ class _Partition:
 
     @property
     def allocated(self) -> int:
-        return sum(self.running.values())
+        return self.alloc
 
     def free(self) -> int:
-        return self.capacity - self.allocated
+        return self.capacity - self.alloc
 
 
 @dataclasses.dataclass
@@ -144,6 +200,14 @@ class SimConfig:
     #: normally.  None reproduces the stationary single-profile run
     #: bit-for-bit.
     scenario: Optional[object] = None
+    #: optional precomputed :class:`~repro.core.sim.trace.Trace`: the
+    #: sampled randomness for this (workflow, scenario, horizon, seed).
+    #: When several policies simulate the *same* drive (paired
+    #: Monte-Carlo comparisons) the caller samples once and shares the
+    #: trace; ``None`` samples one internally.  The engine rejects a
+    #: trace whose skeleton key does not match this run; the caller
+    #: must also sample it from an equal latency model.
+    trace: Optional[Trace] = None
 
 
 @dataclasses.dataclass
@@ -228,11 +292,30 @@ class Simulator:
         if self.cfg.duration_s <= 0:
             raise ValueError("SimConfig.duration_s must be > 0")
         self.hw: HardwareModel = model.hw
-        self.rng = np.random.RandomState(self.cfg.seed)
 
         self.now = 0.0
         self._heap: List[Tuple[float, int, str, tuple]] = []
         self._seq = 0
+        self._end_t = self.cfg.duration_s
+        # chunk-boundary event gating (fast path), two tiers:
+        #  - policies that never act on "chunk" points (Cyc.,
+        #    Tp-driven declare uses_chunk_points=False): skipping is
+        #    behaviour-identical — those events were pure heap traffic;
+        #  - jobs whose task compiles to a single DoP: their boundaries
+        #    are skipped even under chunk-using policies.  This one is
+        #    an intentional approximation — such a job's boundary was
+        #    still a partition-wide scheduling point that could resize
+        #    *co-located* jobs between other events.  The bundled
+        #    workloads compile no single-DoP task, so stock benchmarks
+        #    are unaffected.
+        self._chunk_points = (
+            bool(getattr(policy, "uses_chunk_points", True))
+            and self.cfg.n_chunks > 1
+        )
+        self._fixed_dop: frozenset = frozenset(
+            name for name, t in wf.tasks.items()
+            if not t.is_sensor and len(t.dop_candidates()) <= 1
+        )
 
         self.jobs: List[Job] = []
         self.parts: List[_Partition] = [
@@ -258,174 +341,92 @@ class Simulator:
     # ------------------------------------------------------------------
     # construction
     # ------------------------------------------------------------------
-    def _chain_sources(self, insts) -> Dict[Tuple[str, int], float]:
-        """(chain name, sink instance index) -> source sample time, by
-        walking each sink's predecessor chain through the unrolled
-        instance graph (same units as the instances' releases)."""
-        inst_by_key = {(i.task, i.index): i for i in insts}
-        release_of = {(i.task, i.index): i.release_s for i in insts}
-
-        def trace(chain, sink_idx: int) -> Optional[int]:
-            node_i = len(chain.nodes) - 1
-            cur = inst_by_key.get((chain.nodes[node_i], sink_idx))
-            while cur is not None and node_i > 0:
-                prev = chain.nodes[node_i - 1]
-                nxt = None
-                for (pt, pj) in cur.preds:
-                    if pt == prev:
-                        nxt = inst_by_key.get((pt, pj))
-                        break
-                cur = nxt
-                node_i -= 1
-            return cur.index if cur is not None else None
-
-        out: Dict[Tuple[str, int], float] = {}
-        for chain in self.wf.chains:
-            sink = chain.nodes[-1]
-            n_sink = sum(1 for i in insts if i.task == sink)
-            for k in range(n_sink):
-                src_idx = trace(chain, k)
-                if src_idx is None:
-                    continue
-                out[(chain.name, k)] = release_of[(chain.nodes[0], src_idx)]
-        return out
-
     def _build_jobs(self) -> None:
+        """Materialize the job list from the (cached) structural
+        skeleton and the (vectorized) sampled trace.
+
+        The piecewise per-rate-regime unrolling, dependency wiring and
+        chain-source mapping live in
+        :func:`~repro.core.sim.trace.build_skeleton`; the per-job
+        random draws follow the counter-based stream contract of
+        :mod:`~repro.core.sim.trace`.  This pass only binds the
+        schedule's plans (partition, ERT, sub-deadline, planned DoP) to
+        each job — the one input that differs between policies
+        simulating the same drive.
+        """
         wf, cfg = self.wf, self.cfg
-        scen = self.cfg.scenario
-        # non-stationary workloads: jobs sample from the profile of the
-        # driving mode active at their release time
-        mode_profiles = scen.profiles_for(self.model) if scen is not None else None
+        scen = cfg.scenario
+        skel = build_skeleton(wf, scen, cfg.duration_s)
+        self._regimes = skel.regimes
+        trace = cfg.trace
+        if trace is None:
+            trace = sample_trace(skel, self.model, scen, cfg.seed)
+        elif trace.skeleton_key != skel.key:
+            raise ValueError(
+                "SimConfig.trace was sampled for a different "
+                "workflow/scenario/horizon than this run"
+            )
 
-        # piecewise hyper-period re-unrolling: scenario modes may
-        # modulate sensor rates, which changes the hyper-period mid-run.
-        # The timeline splits into regimes of constant sensor periods;
-        # each regime re-anchors the hardware timers at its start and
-        # unrolls its *own* workflow.  A script with no rate-modulating
-        # mode (or no scenario at all) is a single regime and reproduces
-        # the stationary cyclic unrolling bit-for-bit.  Regimes past the
-        # simulation horizon build no jobs (a script may be far longer
-        # than the run).
-        if scen is not None and hasattr(scen, "rate_regimes"):
-            regimes = [
-                r for r in scen.rate_regimes(wf, cfg.duration_s)
-                if r[0] < cfg.duration_s - 1e-12
-            ]
-        else:
-            regimes = [(0.0, cfg.duration_s, wf)]
-        self._regimes = regimes
+        # per-task constants, hoisted out of the per-job loop.  The
+        # mode transforms never touch sync_per_tile_s, so the base
+        # profile's value is authoritative for every mode.
+        plan_of: Dict[str, tuple] = {}
+        for name, task in wf.tasks.items():
+            ddl = wf.deadline_offset(name)
+            if task.is_sensor:
+                plan_of[name] = (True, ddl, None)
+            else:
+                plan = self.schedule.plans[name]
+                plan_of[name] = (
+                    False, ddl,
+                    (
+                        plan.partition, plan.ert_s, plan.subdeadline_s,
+                        plan.dop, self.model.profiles[name].sync_per_tile_s,
+                    ),
+                )
 
-        # tightest E2E deadline offset per task (chain structure and
-        # deadlines are rate-independent)
-        ddl_off: Dict[str, float] = {}
-        for t in wf.tasks:
-            chains = wf.chain_for(t)
-            ddl_off[t] = min((c.deadline_s for c in chains), default=math.inf)
+        work_l = trace.work.tolist()
+        io_l = trace.io.tolist()
+        slat_l = trace.sensor_lat.tolist()
+        append = self.jobs.append
+        # positional Job construction in dataclass field order (jid,
+        # task, cycle, idx, release, is_sensor, work_flops, io_s,
+        # sync_s, partition, ert, sub_ddl, e2e_ddl, plan_dop,
+        # deps_remaining, succs) — this loop runs once per job and
+        # dominates warm build time, so it stays lean
+        for i, (t, cyc, ix, rel_t, sen, dep, suc) in enumerate(zip(
+            skel.tasks, skel.cycle, skel.idx, skel.release_list,
+            skel.is_sensor, skel.deps_remaining, skel.succs,
+        )):
+            is_sensor, ddl, plan = plan_of[t]
+            if is_sensor:
+                lat = slat_l[i]
+                append(Job(
+                    i, t, cyc, ix, rel_t, True, 0.0, lat, 0.0, -1,
+                    rel_t, rel_t + lat * 2, rel_t + ddl, 0, dep, suc,
+                    drop_at_release=skel.drop_at_release[i],
+                ))
+            else:
+                part, ert_s, sub_s, dop, sync = plan
+                append(Job(
+                    i, t, cyc, ix, rel_t, False, work_l[i], io_l[i],
+                    sync, part, rel_t + ert_s, rel_t + sub_s,
+                    rel_t + ddl, dop, dep, suc,
+                ))
 
         # chain accounting: (chain name, sink jid) -> absolute source
-        # sample time, valid across regime seams
-        self._sink_src: Dict[Tuple[str, int], float] = {}
-
-        sink_of = {c.name: c.nodes[-1] for c in wf.chains}
-        for ri, (r0, r1, wf_r) in enumerate(regimes):
-            thp = wf_r.hyper_period_s
-            final = ri == len(regimes) - 1
-            span = (cfg.duration_s - r0) if final else (r1 - r0)
-            # the - 1e-9 absorbs float accumulation in segment bounds
-            # (0.4 + 0.8 > 1.2), which would otherwise add an empty cycle
-            n_cycles = max(1, int(math.ceil(span / thp - 1e-9)))
-            # one segment unroll per regime: every full cycle repeats its
-            # structure at a +cycle*thp offset; only a non-final regime's
-            # last cycle (truncated at the seam, where the next regime
-            # re-anchors and re-releases from r1) unrolls separately
-            insts_full = unroll_hyperperiod(wf_r, t0=r0, t1=r0 + thp)
-            src_full = self._chain_sources(insts_full)
-            index_of: Dict[Tuple[str, int], int] = {}
-            for cycle in range(n_cycles):
-                off = cycle * thp
-                base = r0 + off
-                t1 = base + thp if final else min(base + thp, r1)
-                if t1 - base <= 1e-12:
-                    continue
-                if t1 >= base + thp - 1e-12:   # full cycle
-                    insts = insts_full
-                    src_rel_of = {k: v + off for k, v in src_full.items()}
-                else:                           # truncated seam cycle
-                    insts = unroll_hyperperiod(wf_r, t0=base, t1=t1)
-                    src_rel_of = self._chain_sources(insts)
-                    off = 0.0                   # releases already absolute
-
-                for inst in insts:
-                    task = wf.tasks[inst.task]
-                    rel_t = inst.release_s + off
-                    if mode_profiles is not None:
-                        prof = mode_profiles[scen.mode_at(rel_t)][inst.task]
-                    else:
-                        prof = self.model.profiles[inst.task]
-                    jid = len(self.jobs)
-                    index_of[(inst.task, inst.index)] = jid
-                    if task.is_sensor:
-                        lat = float(
-                            prof.sensor_latency.quantile(
-                                min(self.rng.uniform(0.001, 0.999), 0.999)
-                            )
-                        )
-                        job = Job(
-                            jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
-                            release=rel_t, is_sensor=True,
-                            work_flops=0.0, io_s=lat, sync_s=0.0, partition=-1,
-                            ert=rel_t,
-                            sub_ddl=rel_t + lat * 2,
-                            e2e_ddl=rel_t + ddl_off[inst.task],
-                            plan_dop=0,
-                            drop_at_release=(
-                                scen is not None and scen.dropped(inst.task, rel_t)
-                            ),
-                        )
-                    else:
-                        w = float(
-                            self.rng.lognormal(prof.work.mu, max(prof.work.sigma, 1e-12))
-                        ) if prof.work.mean > 0 else 0.0
-                        io = prof.io.base + (
-                            float(self.rng.exponential(1.0 / prof.io.rate))
-                            if prof.io.rate > 0 else 0.0
-                        )
-                        if scen is not None:
-                            w *= scen.burst_scale(inst.task, rel_t)
-                        plan = self.schedule.plans[inst.task]
-                        job = Job(
-                            jid=jid, task=inst.task, cycle=cycle, idx=inst.index,
-                            release=rel_t, is_sensor=False,
-                            work_flops=w, io_s=io, sync_s=prof.sync_per_tile_s,
-                            partition=plan.partition,
-                            ert=rel_t + plan.ert_s,
-                            sub_ddl=rel_t + plan.subdeadline_s,
-                            e2e_ddl=rel_t + ddl_off[inst.task],
-                            plan_dop=plan.dop,
-                        )
-                    self.jobs.append(job)
-
-                # wire dependencies (within the same cycle: a job's
-                # predecessors release no later than it, so the segment
-                # unroll never leaves one on the far side of a seam)
-                for inst in insts:
-                    jid = index_of[(inst.task, inst.index)]
-                    job = self.jobs[jid]
-                    job.deps_remaining = len(inst.preds)
-                    for (pt, pj) in inst.preds:
-                        self.jobs[index_of[(pt, pj)]].succs.append(jid)
-                # register absolute chain-source sample times for the
-                # sinks of this cycle
-                for (cname, k), src_t0 in src_rel_of.items():
-                    sink_jid = index_of.get((sink_of[cname], k))
-                    if sink_jid is not None:
-                        self._sink_src[(cname, sink_jid)] = src_t0
-                index_of.clear()
+        # sample time, valid across regime seams (skeleton-shared,
+        # read-only)
+        self._sink_src: Dict[Tuple[str, int], float] = skel.sink_src
 
     # ------------------------------------------------------------------
     # event queue
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, payload: tuple) -> None:
+        if t > self._end_t:
+            # the main loop stops at the horizon; events strictly past
+            # it are never processed, so skip the heap traffic
+            return
         self._seq += 1
         heapq.heappush(self._heap, (t, self._seq, kind, payload))
 
@@ -487,6 +488,7 @@ class Simulator:
         job.dop = dop
         job.last_t = self.now
         part.running[job.jid] = dop
+        part.alloc += dop
         if part.stalled:
             job.rate = 0.0  # will start when the stall ends
         else:
@@ -499,6 +501,8 @@ class Simulator:
         rem = (1.0 - job.progress) / job.rate
         self._push(self.now + rem, "finish", (job.jid, job.gen))
         # next chunk boundary
+        if not self._chunk_points or job.task in self._fixed_dop:
+            return
         n = self.cfg.n_chunks
         nxt = math.floor(job.progress * n + 1e-9) + 1
         if nxt < n:
@@ -564,11 +568,12 @@ class Simulator:
         for jid, d in changed.items():
             job = self.jobs[jid]
             if d == 0:
-                del part.running[jid]
+                part.alloc -= part.running.pop(jid)
                 job.dop = 0
                 job.state = JobState.READY
                 self._ready_sets[partition].add(job)
             else:
+                part.alloc += d - part.running[jid]
                 part.running[jid] = d
                 job.dop = d
         self._begin_stall(part, moved, stall)
@@ -628,7 +633,7 @@ class Simulator:
                         * part.running[jid]
                     )
                     self._advance_job(job)
-                    del part.running[jid]
+                    part.alloc -= part.running.pop(jid)
                     job.rate = 0.0
                     job.gen += 1
                     job.dop = 0
@@ -675,7 +680,7 @@ class Simulator:
         job.rate = 0.0
         job.gen += 1
         job.dop = 0
-        del part.running[job.jid]
+        part.alloc -= part.running.pop(job.jid)
         job.state = JobState.READY
         self._ready_sets[job.partition].add(job)
 
@@ -685,7 +690,7 @@ class Simulator:
         if job.state == JobState.RUNNING and part is not None:
             self._touch(part)
             self._advance_job(job)
-            del part.running[job.jid]
+            part.alloc -= part.running.pop(job.jid)
         elif job.state == JobState.READY:
             self._ready_sets[job.partition].discard(job)
         job.state = JobState.DROPPED
@@ -727,7 +732,7 @@ class Simulator:
         part = self.parts[job.partition] if job.partition >= 0 else None
         if part is not None and job.jid in part.running:
             self._touch(part)
-            del part.running[job.jid]
+            part.alloc -= part.running.pop(job.jid)
         job.state = JobState.DONE
         job.progress = 1.0
         job.finish_t = self.now
@@ -735,9 +740,7 @@ class Simulator:
         job.gen += 1
         self._propagate(job)
         # chain accounting at sinks
-        for chain in self.wf.chain_for(job.task):
-            if chain.nodes[-1] != job.task:
-                continue
+        for chain in self.wf.chains_ending_at(job.task):
             t0 = self._sink_src.get((chain.name, job.jid))
             if t0 is None:
                 continue
@@ -758,9 +761,7 @@ class Simulator:
                     self._mode_lats.setdefault(m, []).append(lat)
 
     def _record_dropped_sink(self, job: Job) -> None:
-        for chain in self.wf.chain_for(job.task):
-            if chain.nodes[-1] != job.task:
-                continue
+        for chain in self.wf.chains_ending_at(job.task):
             self.chain_count[chain.name] += 1
             self.chain_violations[chain.name] += 1
             if self.cfg.scenario is not None:
@@ -834,7 +835,8 @@ class Simulator:
                 if job.gen != gen or job.state != JobState.RUNNING:
                     continue
                 self._advance_job(job)
-                # re-arm next chunk boundary
+                # re-arm next chunk boundary (chunk events only exist
+                # for resizable jobs under chunk-using policies)
                 n = self.cfg.n_chunks
                 nxt = math.floor(job.progress * n + 1e-9) + 1
                 if nxt < n and job.rate > 0:

@@ -23,6 +23,13 @@ class Policy:
     #: optional online replanner (``core.runtime.replan.OnlineReplanner``);
     #: attach one to make the policy react to driving-mode switches
     replanner: Optional[object] = None
+    #: whether this policy acts on ``chunk`` scheduling points.  The
+    #: engine skips chunk-boundary event pushes entirely when False —
+    #: an event-loop fast path for policies (Cyc., Tp-driven) whose
+    #: ``on_point`` ignores the "chunk" reason, where those events were
+    #: pure heap traffic.  Leave True if your policy reschedules at
+    #: chunk boundaries (ADS-Tile's ChkTrigger does).
+    uses_chunk_points: bool = True
 
     def setup(self, sim: "Simulator") -> None:
         """Called once before the clock starts."""

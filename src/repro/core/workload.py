@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import OrderedDict
 from fractions import Fraction
 from functools import reduce
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
@@ -25,6 +26,7 @@ __all__ = [
     "Workflow",
     "TaskInstance",
     "unroll_hyperperiod",
+    "clear_unroll_cache",
 ]
 
 
@@ -129,6 +131,24 @@ class Workflow:
             self._preds[v].append(u)
             self._succs[u].append(v)
         self._check_acyclic()
+        # hot-path caches (the simulator queries these per job / per
+        # completion): chain membership, chain sinks, tightest E2E
+        # deadline offsets, task rates, the hyper-period, and the
+        # structural signature used as the unroll/skeleton cache key.
+        self._chains_of: Dict[str, List[Chain]] = {
+            n: [c for c in self.chains if n in c.nodes] for n in self.tasks
+        }
+        self._chains_ending: Dict[str, List[Chain]] = {
+            n: [c for c in self._chains_of[n] if c.nodes[-1] == n]
+            for n in self.tasks
+        }
+        self._ddl_off: Dict[str, float] = {
+            n: min((c.deadline_s for c in self._chains_of[n]), default=math.inf)
+            for n in self.tasks
+        }
+        self._rate_cache: Dict[str, float] = {}
+        self._hp_cache: Optional[float] = None
+        self._signature: Optional[tuple] = None
 
     # -- graph helpers ----------------------------------------------------
     def preds(self, name: str) -> List[str]:
@@ -168,28 +188,67 @@ class Workflow:
     def hyper_period_s(self) -> float:
         """T_hp = lcm of the sensor periods (exact rational arithmetic —
         1/30 s is not integral in any fixed unit)."""
+        if self._hp_cache is not None:
+            return self._hp_cache
         if not self.sensor_tasks:
             raise ValueError("workflow has no sensor tasks")
         fracs = [Fraction(t.period_s).limit_denominator(10**9) for t in self.sensor_tasks]
         num = _lcm(f.numerator for f in fracs)
         den = reduce(math.gcd, (f.denominator for f in fracs))
-        return float(Fraction(num, den))
+        self._hp_cache = float(Fraction(num, den))
+        return self._hp_cache
+
+    @property
+    def structural_signature(self) -> tuple:
+        """Hashable identity of everything the unrolled instance graph
+        depends on: tasks (with sensor periods), edges, and chains.  Two
+        workflows with equal signatures unroll identically, so this is
+        the cache key for :func:`unroll_hyperperiod` memoization and for
+        the simulator's trace-skeleton cache (mode transforms build a
+        *new* ``Workflow`` per call, so identity comparison is useless
+        across runs)."""
+        if self._signature is None:
+            self._signature = (
+                tuple(sorted(
+                    (t.name, t.period_s if t.is_sensor else None)
+                    for t in self.tasks.values()
+                )),
+                tuple(self.edges),
+                tuple((c.name, c.nodes, c.deadline_s) for c in self.chains),
+            )
+        return self._signature
 
     def task_rate_hz(self, name: str) -> float:
         """Effective activation rate of a task: max of its source sensor
         rates along any path (a DNN task fires when all predecessors have a
         fresh job; the slowest upstream sensor gates the rate, matching the
         event-time alignment of §IV-C)."""
+        cached = self._rate_cache.get(name)
+        if cached is not None:
+            return cached
         task = self.tasks[name]
         if isinstance(task, SensorTask):
-            return task.rate_hz
-        preds = self._preds[name]
-        if not preds:
-            raise ValueError(f"DNN task {name} has no predecessors")
-        return min(self.task_rate_hz(p) for p in preds)
+            rate = task.rate_hz
+        else:
+            preds = self._preds[name]
+            if not preds:
+                raise ValueError(f"DNN task {name} has no predecessors")
+            rate = min(self.task_rate_hz(p) for p in preds)
+        self._rate_cache[name] = rate
+        return rate
 
     def chain_for(self, name: str) -> List[Chain]:
-        return [c for c in self.chains if name in c.nodes]
+        return self._chains_of[name]
+
+    def chains_ending_at(self, name: str) -> List[Chain]:
+        """Chains whose sink is ``name`` (the simulator's completion
+        accounting runs this per finished job)."""
+        return self._chains_ending[name]
+
+    def deadline_offset(self, name: str) -> float:
+        """Tightest E2E deadline through ``name`` over all its chains
+        (``inf`` for tasks on no chain)."""
+        return self._ddl_off[name]
 
     @property
     def sensor_periods(self) -> Dict[str, float]:
@@ -282,6 +341,21 @@ class TaskInstance:
         return (self.task, self.index)
 
 
+#: memoized unroll segments keyed on (structural signature, t0, t1,
+#: phase).  Monte-Carlo sweeps re-unroll the same workflow segments for
+#: every policy / replan variant / scenario sharing a regime; the cache
+#: makes repeats free.  Bounded FIFO so unbounded scenario diversity
+#: cannot leak memory.  Cached lists are shared — callers must treat
+#: them as immutable (TaskInstance is frozen; the engine only iterates).
+_UNROLL_CACHE: "OrderedDict[tuple, List[TaskInstance]]" = OrderedDict()
+_UNROLL_CACHE_MAX = 256
+
+
+def clear_unroll_cache() -> None:
+    """Drop all memoized unroll segments (test isolation hook)."""
+    _UNROLL_CACHE.clear()
+
+
 def unroll_hyperperiod(
     wf: Workflow,
     t0: float = 0.0,
@@ -307,6 +381,11 @@ def unroll_hyperperiod(
         t1 = t0 + wf.hyper_period_s
     if t1 <= t0:
         raise ValueError(f"empty unroll segment [{t0}, {t1})")
+    key = (wf.structural_signature, t0, t1, phase_s)
+    cached = _UNROLL_CACHE.get(key)
+    if cached is not None:
+        _UNROLL_CACHE.move_to_end(key)
+        return cached
     instances: List[TaskInstance] = []
     releases: Dict[str, List[float]] = {}
 
@@ -343,4 +422,7 @@ def unroll_hyperperiod(
             instances.append(
                 TaskInstance(task=name, index=i, release_s=rel, preds=tuple(deps))
             )
+    _UNROLL_CACHE[key] = instances
+    while len(_UNROLL_CACHE) > _UNROLL_CACHE_MAX:
+        _UNROLL_CACHE.popitem(last=False)
     return instances

@@ -31,6 +31,7 @@ from .script import (
 from .runner import (
     ScenarioSpec,
     aggregate_sweep,
+    build_trace,
     compile_portfolio,
     parallel_map,
     run_scenario,
@@ -54,6 +55,7 @@ __all__ = [
     "get_scenario",
     "ScenarioSpec",
     "aggregate_sweep",
+    "build_trace",
     "compile_portfolio",
     "parallel_map",
     "run_scenario",

@@ -170,6 +170,35 @@ class ScenarioScript:
         period (i.e. the run needs piecewise re-unrolling)."""
         return len(self.rate_regimes(wf, self.duration_s)) > 1
 
+    def cache_token(self) -> tuple:
+        """Hashable identity of everything *structural* this script
+        contributes to a simulation: the script itself (segments,
+        bursts, dropouts are frozen tuples) plus the sensor-rate
+        modulation of each referenced mode as currently registered.
+        The trace-skeleton cache keys on this, so re-registering a mode
+        with different rates invalidates stale skeletons while profile
+        -only changes (which never alter structure) do not."""
+        return (
+            self,
+            tuple(
+                (
+                    m,
+                    tuple(sorted(get_mode(m).sensor_rate_scale.items())),
+                    tuple(sorted(get_mode(m).sensor_rate_hz.items())),
+                )
+                for m in self.modes()
+            ),
+        )
+
+    def profile_token(self) -> tuple:
+        """The mode objects this script samples from, as currently
+        registered.  ``DrivingMode`` is a frozen value-compared
+        dataclass, so the trace sampler uses this (by equality) to
+        notice a mode re-registered with different *profile* transforms
+        — which must invalidate cached sampling parameters even though
+        the structural :meth:`cache_token` rightly ignores it."""
+        return tuple(get_mode(m) for m in self.modes())
+
     def profiles_for(
         self, model: LatencyModel
     ) -> Dict[str, Dict[str, TaskLatencyProfile]]:
@@ -275,21 +304,26 @@ class MarkovScenarioGenerator:
 
 
 #: plausible drive structure: urban is the hub; weather strikes from
-#: urban/highway and clears back; parking only borders urban.
+#: urban/highway and clears back; parking only borders urban; rush
+#: hour builds out of (and decays back into) ordinary urban traffic.
+#: rush_hour upclocks the cameras (30 -> 60 Hz), so random Monte-Carlo
+#: drives now exercise sensor-rate churn — piecewise re-unrolling and
+#: rate-seam hot-swaps — not just the scripted rate benchmarks.
 DEFAULT_TRANSITIONS: Dict[str, Dict[str, float]] = {
-    "urban": {"highway": 0.35, "parking": 0.15, "adverse_weather": 0.15,
-              "night": 0.10, "urban": 0.25},
-    "highway": {"urban": 0.45, "adverse_weather": 0.15, "night": 0.10,
-                "highway": 0.30},
+    "urban": {"highway": 0.30, "parking": 0.13, "adverse_weather": 0.14,
+              "night": 0.09, "rush_hour": 0.12, "urban": 0.22},
+    "highway": {"urban": 0.40, "adverse_weather": 0.15, "night": 0.10,
+                "rush_hour": 0.05, "highway": 0.30},
     "parking": {"urban": 0.90, "parking": 0.10},
     "adverse_weather": {"urban": 0.50, "highway": 0.30,
                         "adverse_weather": 0.20},
     "night": {"urban": 0.40, "highway": 0.40, "night": 0.20},
+    "rush_hour": {"urban": 0.55, "highway": 0.20, "rush_hour": 0.25},
 }
 
 DEFAULT_DWELL_S: Dict[str, float] = {
     "urban": 0.8, "highway": 1.0, "parking": 0.5,
-    "adverse_weather": 0.7, "night": 0.9,
+    "adverse_weather": 0.7, "night": 0.9, "rush_hour": 0.6,
 }
 
 

@@ -1,0 +1,275 @@
+"""Batched trace-generation tests: the counter-based stream contract,
+skeleton caching, distribution equivalence with the legacy scalar
+sampler, and exact job-level pairing across policies."""
+import numpy as np
+import pytest
+
+from repro.core.benchmark import make_ads_benchmark
+from repro.core.experiment import ExperimentSpec, build_stack, make_policy
+from repro.core.hardware import simba_chip
+from repro.core.latency_model import LatencyModel, LogNormal, ndtri
+from repro.core.sim import SimConfig, Simulator
+from repro.core.sim.trace import (
+    STREAM_IO,
+    STREAM_WORK,
+    build_skeleton,
+    chain_sources,
+    clear_skeleton_cache,
+    counter_uniforms,
+    sample_trace,
+    scalar_reference_trace,
+)
+from repro.core.workload import unroll_hyperperiod
+from repro.scenarios import ScenarioSpec, get_scenario, run_scenario
+
+
+def _stack(**kw):
+    spec = ExperimentSpec(policy="ads_tile", tiles=400, **kw)
+    wf, _hw, model, compiler = build_stack(spec)
+    return wf, model, compiler.compile(model, wf)
+
+
+# ---------------------------------------------------------------------------
+# counter_uniforms: the stream contract primitive
+# ---------------------------------------------------------------------------
+def test_counter_uniforms_pure_and_open_interval():
+    u1 = counter_uniforms(7, "img_backbone", STREAM_WORK,
+                          np.zeros(64, np.uint64),
+                          np.arange(64, dtype=np.uint64),
+                          np.arange(64, dtype=np.uint64))
+    u2 = counter_uniforms(7, "img_backbone", STREAM_WORK,
+                          np.zeros(64, np.uint64),
+                          np.arange(64, dtype=np.uint64),
+                          np.arange(64, dtype=np.uint64))
+    assert np.array_equal(u1, u2)                    # pure function
+    assert np.all((u1 > 0.0) & (u1 < 1.0))           # open interval
+    # every key component matters
+    for variant in (
+        counter_uniforms(8, "img_backbone", STREAM_WORK,
+                         np.zeros(64, np.uint64),
+                         np.arange(64, dtype=np.uint64),
+                         np.arange(64, dtype=np.uint64)),
+        counter_uniforms(7, "lidar_det", STREAM_WORK,
+                         np.zeros(64, np.uint64),
+                         np.arange(64, dtype=np.uint64),
+                         np.arange(64, dtype=np.uint64)),
+        counter_uniforms(7, "img_backbone", STREAM_IO,
+                         np.zeros(64, np.uint64),
+                         np.arange(64, dtype=np.uint64),
+                         np.arange(64, dtype=np.uint64)),
+        counter_uniforms(7, "img_backbone", STREAM_WORK,
+                         np.ones(64, np.uint64),
+                         np.arange(64, dtype=np.uint64),
+                         np.arange(64, dtype=np.uint64)),
+    ):
+        assert not np.array_equal(u1, variant)
+
+
+def test_counter_uniforms_are_uniform():
+    """KS test of the counter stream against U(0, 1)."""
+    scipy_stats = pytest.importorskip("scipy.stats")
+    n = 20000
+    u = counter_uniforms(3, "vis_det", STREAM_WORK,
+                         np.zeros(n, np.uint64),
+                         np.zeros(n, np.uint64),
+                         np.arange(n, dtype=np.uint64))
+    stat = scipy_stats.kstest(u, "uniform")
+    assert stat.pvalue > 0.01, stat
+
+
+def test_ndtri_vectorized_matches_scalar():
+    qs = np.concatenate([
+        np.linspace(1e-6, 1 - 1e-6, 101), [0.001, 0.02425, 0.5, 0.97575]
+    ])
+    vec = ndtri(qs)
+    scal = np.asarray([ndtri(float(q)) for q in qs])
+    assert np.array_equal(vec, scal)
+    assert ndtri(0.0) == -np.inf and ndtri(1.0) == np.inf
+    # round-trips a couple of known quantiles
+    assert abs(ndtri(0.975) - 1.959964) < 1e-4
+    assert abs(ndtri(0.5)) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# trace determinism: build order / horizon / policy independence
+# ---------------------------------------------------------------------------
+def test_draws_independent_of_horizon():
+    """Shortening the run must not shift the draws of shared jobs."""
+    wf, model, sched = _stack()
+    a = Simulator(wf, model, sched, make_policy("ads_tile"),
+                  SimConfig(duration_s=0.4, seed=11))
+    b = Simulator(wf, model, sched, make_policy("ads_tile"),
+                  SimConfig(duration_s=0.8, seed=11))
+    by_key = {(j.task, j.cycle, j.idx): j for j in b.jobs}
+    assert len(a.jobs) < len(b.jobs)
+    for j in a.jobs:
+        other = by_key[(j.task, j.cycle, j.idx)]
+        assert j.work_flops == other.work_flops
+        assert j.io_s == other.io_s
+
+
+def test_paired_policies_identical_draws():
+    """Acceptance: for one scenario seed, every policy sees bit-identical
+    work_flops/io_s per job — comparisons are paired at the job level."""
+    wf, model, sched_ads = _stack()
+    spec_tp = ExperimentSpec(policy="tp_driven", tiles=400)
+    _wf2, _hw, model_tp, compiler_tp = build_stack(spec_tp)
+    sched_tp = compiler_tp.compile(model_tp, _wf2)
+    a = Simulator(wf, model, sched_ads, make_policy("ads_tile"),
+                  SimConfig(duration_s=0.6, seed=5))
+    b = Simulator(_wf2, model_tp, sched_tp, make_policy("tp_driven"),
+                  SimConfig(duration_s=0.6, seed=5))
+    assert len(a.jobs) == len(b.jobs)
+    for x, y in zip(a.jobs, b.jobs):
+        assert (x.task, x.cycle, x.idx) == (y.task, y.cycle, y.idx)
+        assert x.work_flops == y.work_flops
+        assert x.io_s == y.io_s
+
+
+def test_draws_stable_across_regime_splits():
+    """A scenario's regime list is duration-independent for shared
+    prefixes: draws of regime-0 jobs agree between horizons that cut
+    the script at different points."""
+    scen = get_scenario("rate_churn")          # night:0.6 urban:0.6 rush:0.8
+    spec = ScenarioSpec(scenario=scen, policy="ads_tile", replan=False, seed=9)
+    wf, _hw, model, compiler = build_stack(spec)
+    sched = compiler.compile(model, wf)
+    short = Simulator(wf, model, sched, make_policy("ads_tile"),
+                      SimConfig(duration_s=0.5, seed=9, scenario=scen))
+    full = Simulator(wf, model, sched, make_policy("ads_tile"),
+                     SimConfig(duration_s=scen.duration_s, seed=9, scenario=scen))
+    # release times identify a job uniquely across the whole run (the
+    # (cycle, idx) pair repeats across regimes)
+    by_key = {(j.task, round(j.release, 12)): j for j in full.jobs}
+    assert len(by_key) == len(full.jobs)
+    for j in short.jobs:
+        other = by_key.get((j.task, round(j.release, 12)))
+        assert other is not None
+        assert j.work_flops == other.work_flops
+        assert j.io_s == other.io_s
+
+
+def test_shared_trace_reproduces_internal_sampling():
+    """run_scenario(trace=...) must equal the trace-less run exactly."""
+    scen = get_scenario("commute")
+    spec = ScenarioSpec(scenario=scen, policy="ads_tile", seed=4)
+    from repro.scenarios import build_trace
+    r_implicit = run_scenario(spec)
+    r_explicit = run_scenario(spec, trace=build_trace(spec))
+    assert r_implicit.effective_frac == r_explicit.effective_frac
+    assert r_implicit.realloc_frac == r_explicit.realloc_frac
+    assert r_implicit.chain_violations == r_explicit.chain_violations
+
+
+def test_mismatched_trace_rejected():
+    wf, model, sched = _stack()
+    skel = build_skeleton(wf, None, 0.4)
+    tr = sample_trace(skel, model, None, 3)
+    with pytest.raises(ValueError):
+        Simulator(wf, model, sched, make_policy("ads_tile"),
+                  SimConfig(duration_s=0.8, seed=3, trace=tr))
+
+
+# ---------------------------------------------------------------------------
+# distribution equivalence vs the legacy scalar path
+# ---------------------------------------------------------------------------
+def test_distribution_equivalence_with_scalar_path():
+    """KS tests: per-task work and io samples from the counter-based
+    path match the legacy sequential-RandomState path in distribution
+    (they are intentionally not bit-identical)."""
+    scipy_stats = pytest.importorskip("scipy.stats")
+    wf = make_ads_benchmark()
+    model = LatencyModel.from_workflow(wf, simba_chip(400))
+    skel = build_skeleton(wf, None, 30.0)       # ~300 cycles of samples
+    batched = sample_trace(skel, model, None, 2)
+    legacy = scalar_reference_trace(skel, model, None, 2)
+    tasks = np.asarray(skel.tasks)
+    for name in ("img_backbone", "traj_pred", "lidar_det"):
+        ix = np.flatnonzero((tasks == name))
+        assert len(ix) >= 200
+        for field in ("work", "io"):
+            a = getattr(batched, field)[ix]
+            b = getattr(legacy, field)[ix]
+            stat = scipy_stats.ks_2samp(a, b)
+            assert stat.pvalue > 0.005, (name, field, stat)
+    # sensor latency stream too
+    ix = np.flatnonzero(tasks == "cam_multi")
+    stat = scipy_stats.ks_2samp(batched.sensor_lat[ix], legacy.sensor_lat[ix])
+    assert stat.pvalue > 0.005, stat
+
+
+def test_lognormal_quantiles_match_scalar():
+    ln = LogNormal(2.5e9, 3.3)
+    qs = np.linspace(0.001, 0.999, 97)
+    vec = ln.quantiles(qs)
+    scal = np.asarray([ln.quantile(float(q)) for q in qs])
+    assert np.allclose(vec, scal, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# skeleton structure + caching
+# ---------------------------------------------------------------------------
+def test_skeleton_matches_unroll_structure():
+    wf = make_ads_benchmark()
+    skel = build_skeleton(wf, None, wf.hyper_period_s)
+    insts = unroll_hyperperiod(wf)
+    assert skel.n == len(insts)
+    assert skel.tasks == [i.task for i in insts]
+    assert np.array_equal(skel.release, [i.release_s for i in insts])
+    # dependency counts survive the CSR round-trip
+    assert skel.deps_remaining == [len(i.preds) for i in insts]
+    n_edges = sum(len(i.preds) for i in insts)
+    assert sum(len(s) for s in skel.succs) == n_edges
+    # chain sources agree with a direct computation
+    src = chain_sources(wf, insts)
+    assert len(skel.sink_src) == len(src)
+
+
+def test_skeleton_cached_and_cleared():
+    wf = make_ads_benchmark()
+    clear_skeleton_cache()
+    a = build_skeleton(wf, None, 0.5)
+    b = build_skeleton(wf, None, 0.5)
+    assert a is b
+    # an equal-structure workflow hits the same entry (mode transforms
+    # build new Workflow objects per call)
+    wf2 = make_ads_benchmark()
+    assert build_skeleton(wf2, None, 0.5) is a
+    clear_skeleton_cache()
+    assert build_skeleton(wf, None, 0.5) is not a
+
+
+def test_reregistered_mode_profiles_invalidate_param_memo():
+    """A mode re-registered with different *profile* transforms (same
+    rates, so the structural skeleton stays valid) must change the
+    sampled draws — the per-(skeleton, model) parameter memo may not
+    serve stale arrays."""
+    from repro.scenarios import MODES, DrivingMode, register_mode
+    from repro.scenarios.script import ScenarioScript
+    register_mode(DrivingMode(name="tuned", work_scale=1.0), overwrite=True)
+    try:
+        scen = ScenarioScript.parse("tuned:0.4", name="tuned-run")
+        wf = make_ads_benchmark()
+        model = LatencyModel.from_workflow(wf, simba_chip(400))
+        skel = build_skeleton(wf, scen, 0.4)
+        base = sample_trace(skel, model, scen, 7)
+        register_mode(DrivingMode(name="tuned", work_scale=2.0),
+                      overwrite=True)
+        assert build_skeleton(wf, scen, 0.4) is skel  # structure unchanged
+        doubled = sample_trace(skel, model, scen, 7)
+        dnn = skel.dnn_ix
+        assert np.allclose(doubled.work[dnn], 2.0 * base.work[dnn])
+    finally:
+        del MODES["tuned"]
+
+
+def test_sensor_latency_positive_and_bounded():
+    wf, model, sched = _stack()
+    sim = Simulator(wf, model, sched, make_policy("ads_tile"),
+                    SimConfig(duration_s=0.5, seed=1))
+    sensors = [j for j in sim.jobs if j.is_sensor]
+    assert sensors
+    for j in sensors:
+        assert j.io_s > 0.0
+        assert np.isfinite(j.io_s)
+        assert j.sub_ddl > j.release
