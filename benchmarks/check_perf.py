@@ -1,0 +1,91 @@
+"""CI perf-regression gate: fresh ``perf_bench`` JSON vs the committed
+baseline.
+
+Usage::
+
+    python -m benchmarks.check_perf BENCH_sim.json BENCH_sim-py3.12.json \
+        [--metric perf_sweep_e2e] [--threshold 1.5]
+
+Both files are ``benchmarks.run --out`` artifacts.  The gate compares
+the per-run wall-clock (``us_per_call``) of ``--metric`` — by default
+``perf_sweep_e2e``, the pinned 8x2 Monte-Carlo sweep that exercises the
+whole engine — and **fails (exit 2) when the fresh number regresses by
+more than ``--threshold``x** over the committed baseline.
+
+The committed ``BENCH_sim.json`` was measured on the reference dev
+container; CI runners are not identical hardware, which is why the
+default threshold is a generous 1.5x — it exists to catch
+order-of-magnitude engine regressions (an accidentally quadratic loop,
+a lost cache), not single-digit percentages.  When a PR legitimately
+changes the perf envelope, refresh the baseline (see
+``docs/performance.md``) in the same PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_METRIC = "perf_sweep_e2e"
+DEFAULT_THRESHOLD = 1.5
+
+
+def load_metric(path: Path, metric: str) -> dict:
+    """The named row of a ``benchmarks.run --out`` JSON file."""
+    data = json.loads(path.read_text())
+    for row in data.get("rows", []):
+        if row.get("name") == metric:
+            return row
+    raise KeyError(f"{path}: no row named {metric!r}")
+
+
+def check(
+    baseline: Path,
+    fresh: Path,
+    metric: str = DEFAULT_METRIC,
+    threshold: float = DEFAULT_THRESHOLD,
+) -> tuple:
+    """``(ratio, ok)`` — fresh/baseline per-call wall-clock vs gate."""
+    base = load_metric(baseline, metric)
+    new = load_metric(fresh, metric)
+    base_us = float(base["us_per_call"])
+    new_us = float(new["us_per_call"])
+    if base_us <= 0:
+        raise ValueError(f"{baseline}: non-positive baseline {base_us}")
+    ratio = new_us / base_us
+    return ratio, ratio <= threshold
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", type=Path,
+                    help="committed reference (BENCH_sim.json)")
+    ap.add_argument("fresh", type=Path,
+                    help="freshly measured perf-smoke artifact")
+    ap.add_argument("--metric", default=DEFAULT_METRIC,
+                    help=f"row to compare (default {DEFAULT_METRIC})")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="fail when fresh/baseline exceeds this "
+                         f"(default {DEFAULT_THRESHOLD})")
+    args = ap.parse_args(argv)
+
+    ratio, ok = check(args.baseline, args.fresh, args.metric, args.threshold)
+    verdict = "OK" if ok else "REGRESSION"
+    print(
+        f"{args.metric}: fresh/baseline = {ratio:.2f}x "
+        f"(threshold {args.threshold}x) -> {verdict}"
+    )
+    if not ok:
+        print(
+            "perf gate failed: either fix the regression or, if the "
+            "change is intentional, refresh the committed baseline "
+            "(docs/performance.md#refreshing-the-baseline)",
+            file=sys.stderr,
+        )
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,165 @@
+"""Fig. S-predict — predictive replanning: pre-stage vs react at seams.
+
+Context switches in an ADS are predictable seconds ahead (route
+structure, fleet dwell statistics), while a *reactive* runtime can only
+detect a shift after a confirmation window — and then pays the whole
+weight/feature migration exactly when the new mode's load arrives.
+This suite compares three replanning strategies on identical drives
+(same seeds, one shared trace per scenario, so every comparison is
+paired at the job level):
+
+* ``reactive``   — hot-swap after a ``detection_delay_s`` confirmation
+  window past each seam (the honest version of PR-1's oracle swap);
+* ``predictive`` — forecast-driven: background-stage the target table's
+  weight deltas ahead of the seam, then drain-aware activation (no
+  detection delay — the forecast turns detection into confirmation);
+* ``blend``      — hedge-only ablation: every staged transition installs
+  the slack-blended table, deferring the capacity move to the seam.
+
+Two parts:
+
+1. ``rate_churn`` (night 15 Hz -> urban 30 Hz -> rush-hour 60 Hz
+   cameras) over several paired seeds — the hyper-period-changing
+   seams where staging matters most.
+2. A Markov sweep of random drives (route-informed forecasts over each
+   sampled drive: the navigation stack knows its own plan).
+
+Headline metrics per strategy: *post-seam* deadline misses (violations
+attributed to every mode after the drive's opening one), reallocation
+waste (stall tile-seconds as a capacity fraction), and tiles usefully
+busy (``effective_frac``).  ``--duration`` scales the number of seeds /
+sampled drives, not the per-drive length.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.scenarios import (
+    ScenarioSpec,
+    default_generator,
+    get_mode,
+    get_scenario,
+)
+from repro.scenarios.runner import (
+    _run_group,
+    build_trace,
+    compile_portfolio,
+    parallel_map,
+    run_scenario,
+)
+
+from .common import emit
+
+REPLAN_MODES = ("reactive", "predictive", "blend")
+
+#: context-shift confirmation window of the reactive baseline (a few
+#: 30 Hz frames of observed statistics; predictive pays it only on
+#: wrong forecasts)
+DETECTION_S = 0.08
+
+
+def _post_seam(report, initial_mode):
+    """(violations, completions) attributed to non-opening modes."""
+    post = [s for m, s in report.mode_stats.items() if m != initial_mode]
+    return (
+        sum(s.n_violations for s in post),
+        sum(s.n_completed for s in post),
+    )
+
+
+def _emit_strategy(tag: str, agg) -> None:
+    v, c, realloc, eff, n_realloc, n_runs, hits, misses = agg
+    rate = v / max(c, 1)
+    emit(
+        tag,
+        rate * 1e6,
+        f"post_viol={v};post_n={c};post_rate={rate:.4f};"
+        f"realloc={realloc / n_runs:.5f};eff={eff / n_runs:.4f};"
+        f"n_realloc={n_realloc};fc_hits={hits};fc_misses={misses}",
+    )
+
+
+def run(duration: float = 1.0, seed: int = 1) -> None:
+    # -- part 1: rate_churn, paired seeds -------------------------------
+    scen = get_scenario("rate_churn")
+    n_seeds = max(2, int(round(3 * duration)))
+    base = ScenarioSpec(scenario=scen, policy="ads_tile", seed=seed,
+                        detection_delay_s=DETECTION_S)
+    pf = compile_portfolio(base)
+    agg = {m: [0, 0, 0.0, 0.0, 0, 0, 0, 0] for m in REPLAN_MODES}
+    for s in range(seed, seed + n_seeds):
+        spec = dataclasses.replace(base, seed=s, portfolio=pf)
+        trace = build_trace(spec)
+        for mode in REPLAN_MODES:
+            r = run_scenario(
+                dataclasses.replace(spec, replan_mode=mode), trace=trace
+            )
+            v, c = _post_seam(r, scen.segments[0].mode)
+            a = agg[mode]
+            a[0] += v
+            a[1] += c
+            a[2] += r.realloc_frac
+            a[3] += r.effective_frac
+            a[4] += r.n_realloc
+            a[5] += 1
+            if r.forecast is not None:
+                a[6] += r.forecast.n_hits
+                a[7] += r.forecast.n_misses
+    for mode in REPLAN_MODES:
+        _emit_strategy(f"figS_predict_churn_{mode}", agg[mode])
+    ra, pr = agg["reactive"], agg["predictive"]
+    emit(
+        "figS_predict_churn_headline",
+        (ra[2] / max(pr[2], 1e-12)) * 1e6,
+        f"miss_delta={ra[0] - pr[0]};"
+        f"waste_ratio={ra[2] / max(pr[2], 1e-12):.2f};"
+        f"seeds={n_seeds}",
+    )
+
+    # -- part 2: Markov drives, route-informed forecasts ----------------
+    gen = default_generator()
+    all_modes = sorted(gen.transitions)
+    mode_defs = {m: get_mode(m) for m in all_modes}
+    pf_mc = None
+    n = max(4, int(round(12 * duration)))
+    groups = []
+    for i in range(n):
+        s_i = seed * 100003 + i
+        script = gen.sample(2.0, seed=s_i)
+        spec = ScenarioSpec(
+            scenario=script, policy="ads_tile", seed=s_i,
+            detection_delay_s=DETECTION_S, mode_defs=mode_defs,
+        )
+        if pf_mc is None:
+            pf_mc = compile_portfolio(spec, all_modes)
+        groups.append([
+            dataclasses.replace(spec, replan_mode=m, portfolio=pf_mc)
+            for m in REPLAN_MODES
+        ])
+    rows = [r for rs in parallel_map(_run_group, groups) for r in rs]
+    agg = {m: [0, 0, 0.0, 0.0, 0, 0, 0, 0] for m in REPLAN_MODES}
+    for row in rows:
+        init = row["script"].split(":")[0]
+        a = agg[str(row["replan_mode"])]
+        for m, st in row["per_mode"].items():
+            if m != init:
+                a[0] += st["n_violations"]
+                a[1] += st["n_completed"]
+        a[2] += row["realloc_frac"]
+        a[3] += row["effective_frac"]
+        a[4] += row["n_realloc"]
+        a[5] += 1
+        fc = row["forecast"]
+        if fc is not None:
+            a[6] += fc["n_hits"]
+            a[7] += fc["n_misses"]
+    for mode in REPLAN_MODES:
+        _emit_strategy(f"figS_predict_markov_{mode}", agg[mode])
+    ra, pr = agg["reactive"], agg["predictive"]
+    emit(
+        "figS_predict_markov_headline",
+        (ra[2] / max(pr[2], 1e-12)) * 1e6,
+        f"miss_delta={ra[0] - pr[0]};"
+        f"waste_ratio={ra[2] / max(pr[2], 1e-12):.2f};"
+        f"n={n}",
+    )

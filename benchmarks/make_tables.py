@@ -3,10 +3,11 @@ the dry-run artifacts, plus the §Scenarios table from any saved
 scenario/rate-sweep runs:  PYTHONPATH=src python -m benchmarks.make_tables
 
 Scenario inputs are the JSON files written by
-``python -m benchmarks.run --only figS_scenarios,figS_rates --out
-benchmarks/results/scenarios/<name>.json`` (CI uploads one per run as a
-workflow artifact; drop downloaded artifacts into that directory to
-render them alongside the paper tables).
+``python -m benchmarks.run --only figS_scenarios,figS_rates,figS_predict
+--out benchmarks/results/scenarios/<name>.json`` (CI uploads one per
+run as a workflow artifact — including the weekly extended sweep; drop
+downloaded artifacts into that directory to render them alongside the
+paper tables).
 """
 from __future__ import annotations
 

@@ -26,8 +26,8 @@ import time
 from pathlib import Path
 
 from . import fig6_casestudy, fig11_ablation, fig12_e2e, fig13_scaling
-from . import figS_rates, figS_scenarios, headroom, perf_bench, roofline
-from . import table2_overhead
+from . import figS_predict, figS_rates, figS_scenarios, headroom
+from . import perf_bench, roofline, table2_overhead
 
 SUITES = {
     "fig6": fig6_casestudy.run,
@@ -36,6 +36,7 @@ SUITES = {
     "fig13": fig13_scaling.run,
     "figS": figS_scenarios.run,
     "figS_rates": figS_rates.run,
+    "figS_predict": figS_predict.run,
     "perf": perf_bench.run,
     "table2": table2_overhead.run,
     "headroom": headroom.run,
@@ -44,7 +45,7 @@ SUITES = {
 
 #: CLI conveniences: the scenario suites also answer to their module names
 ALIASES = {"figS_scenarios": "figS", "rates": "figS_rates",
-           "perf_bench": "perf"}
+           "predict": "figS_predict", "perf_bench": "perf"}
 
 
 def _rows_from_csv(text: str) -> list:

@@ -8,12 +8,20 @@ bound **when** tasks enter colocation).  Within that space the
 DAG-aware scheduler (Algorithm 2) shares tiles across co-active paths
 and slack along DAG edges.
 """
-from .reservation import fit_quota
+from .reservation import fit_quota, plan_slack
 from .scheduler import AdsTilePolicy
 from .l2p import L2PMap
-from .replan import OnlineReplanner, SchedulePortfolio
+from .forecast import ModeForecast, ModeForecaster
+from .replan import (
+    OnlineReplanner,
+    PredictiveReplanner,
+    SchedulePortfolio,
+    blend_schedules,
+)
 
 __all__ = [
-    "AdsTilePolicy", "fit_quota", "L2PMap",
-    "OnlineReplanner", "SchedulePortfolio",
+    "AdsTilePolicy", "fit_quota", "plan_slack", "L2PMap",
+    "ModeForecast", "ModeForecaster",
+    "OnlineReplanner", "PredictiveReplanner", "SchedulePortfolio",
+    "blend_schedules",
 ]

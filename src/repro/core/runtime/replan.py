@@ -14,6 +14,21 @@ up in ``realloc_frac`` rather than being assumed free.
 Any :class:`~repro.core.sim.policy.Policy` can carry an
 :class:`OnlineReplanner`: the base class's ``on_mode_change`` delegates
 to ``policy.replanner`` when one is attached.
+
+:class:`PredictiveReplanner` goes one step further: instead of paying
+the swap exactly *at* the seam — the moment the new mode's load
+arrives — it consumes :class:`~repro.core.runtime.forecast.ModeForecast`s
+and spends the bounded-realloc window *before* the seam.  A
+high-confidence forecast **pre-swaps** the target mode's full table
+``lead_s`` ahead of the predicted switch (weight/feature migration is
+charged through the same bounded-realloc path, just earlier and under
+the old, typically lighter, load); a low-confidence forecast installs a
+**blended** table (:func:`blend_schedules`) that hedges per task
+between the old and new plans by slack, deferring the capacity move to
+the seam itself.  A forecast that never materialises is *reverted*, and
+the revert is cheap by construction: PENDING jobs are retargeted, not
+migrated, so swapping back charges no checkpoint bytes for work that
+never ran under the staged table.
 """
 from __future__ import annotations
 
@@ -23,12 +38,18 @@ from typing import Dict, Mapping, Optional, TYPE_CHECKING
 from ..gha.compiler import GHACompiler
 from ..gha.schedule import Schedule
 from ..latency_model import LatencyModel
+from ..sim.engine import ForecastStats
 from ..workload import Workflow
+from .forecast import ModeForecast, ModeForecaster
+from .reservation import plan_slack
 
 if TYPE_CHECKING:  # pragma: no cover
     from ..sim.engine import Simulator
 
-__all__ = ["SchedulePortfolio", "OnlineReplanner"]
+__all__ = [
+    "SchedulePortfolio", "OnlineReplanner", "PredictiveReplanner",
+    "blend_schedules",
+]
 
 
 @dataclasses.dataclass
@@ -85,8 +106,67 @@ class SchedulePortfolio:
                     break
             sched.meta["mode"] = name
             sched.meta["hyper_period_s"] = m_wf.hyper_period_s
+            # per-task activation periods under this mode's sensor
+            # rates: the engine's rate-aware hot-swap re-staggers
+            # PENDING ERTs onto the incoming regime's release grid
+            # whenever these differ from the outgoing table's
+            sched.meta["task_period_s"] = {
+                t: 1.0 / m_wf.task_rate_hz(t)
+                for t, task in m_wf.tasks.items() if not task.is_sensor
+            }
             out[name] = sched
         return cls(out)
+
+
+def blend_schedules(old: Schedule, new: Schedule, wf: Workflow) -> Schedule:
+    """Blend two scheduling tables for a low-confidence transition.
+
+    Partition capacities stay the *old* table's — the expensive part of
+    a swap is the capacity move (preempted jobs, checkpoint migration),
+    and a transition we are not sure about must not pay it yet.  Plans
+    blend **per task by slack** (:func:`~.reservation.plan_slack`):
+    each task adopts whichever regime's plan gives it the earlier
+    sub-deadline — the more *urgent* of the two targets — so the
+    runtime treats every task at least as urgently as either regime
+    demands while the context is ambiguous.  DoPs are clamped to the
+    retained partition capacities.
+
+    The blend carries the old table's ``task_period_s`` meta: the
+    sensor-rate regime has not changed yet, so a later full swap still
+    sees the correct outgoing periods and re-staggers at the real seam.
+    """
+    if len(old.partitions) != len(new.partitions):
+        raise ValueError("blend requires schedules with equal partition counts")
+    caps = {p.index: p.capacity for p in old.partitions}
+    plans = {}
+    for task, new_plan in new.plans.items():
+        old_plan = old.plans.get(task)
+        if old_plan is None:
+            pick = new_plan
+        else:
+            e2e = wf.deadline_offset(task)
+            # larger downstream slack == earlier sub-deadline; keep the
+            # old plan on ties (fewer retargets)
+            pick = (
+                new_plan
+                if plan_slack(new_plan, e2e) > plan_slack(old_plan, e2e)
+                else old_plan
+            )
+        dop = max(1, min(pick.dop, caps[pick.partition]))
+        plans[task] = dataclasses.replace(pick, dop=dop)
+    meta: Dict[str, object] = {
+        "blend_of": (old.meta.get("mode"), new.meta.get("mode")),
+        "hyper_period_s": old.meta.get("hyper_period_s"),
+    }
+    if old.meta.get("task_period_s") is not None:
+        meta["task_period_s"] = old.meta["task_period_s"]
+    return Schedule(
+        plans=plans,
+        partitions=[dataclasses.replace(p) for p in old.partitions],
+        q=min(old.q, new.q),
+        total_tiles=old.total_tiles,
+        meta=meta,
+    )
 
 
 @dataclasses.dataclass
@@ -102,14 +182,306 @@ class OnlineReplanner:
 
     portfolio: SchedulePortfolio
     resetup: bool = True
+    #: a real runtime cannot observe "the mode changed" as an event: it
+    #: infers the context shift from sensor/latency statistics over a
+    #: confirmation window (Liu et al. 2022).  ``detection_delay_s`` > 0
+    #: models that window — the reactive swap fires this long *after*
+    #: the seam, running the new load on the stale table meanwhile.
+    #: The default 0 keeps the original oracle-reactive behaviour.
+    detection_delay_s: float = 0.0
     n_swaps: int = 0
     total_stall_s: float = 0.0
 
-    def on_mode_change(self, sim: "Simulator", mode: str, now: float) -> None:
-        new = self.portfolio.get(mode)
-        if new is None or new is sim.schedule:
-            return
-        self.total_stall_s += sim.hotswap_schedule(new)
+    def _swap_to(
+        self,
+        sim: "Simulator",
+        table: Optional[Schedule],
+        regime_anchor_s: Optional[float] = None,
+        prestage_window_s: float = 0.0,
+    ) -> float:
+        """Install ``table`` through the bounded-realloc hot-swap path
+        (no-op when it is missing or already active)."""
+        if table is None or table is sim.schedule:
+            return 0.0
+        stall = sim.hotswap_schedule(
+            table,
+            regime_anchor_s=regime_anchor_s,
+            prestage_window_s=prestage_window_s,
+        )
+        self.total_stall_s += stall
         self.n_swaps += 1
         if self.resetup:
             sim.policy.setup(sim)
+        return stall
+
+    def _reactive_swap(self, sim: "Simulator", mode: str, now: float) -> None:
+        """Swap to ``mode``'s table the way a reactive runtime can:
+        immediately with an oracle (delay 0), else after the detection
+        confirmation window."""
+        if self.detection_delay_s > 0.0:
+            sim.arm_forecast(now + self.detection_delay_s, ("detect", mode))
+        else:
+            self._swap_to(sim, self.portfolio.get(mode))
+
+    def on_mode_change(self, sim: "Simulator", mode: str, now: float) -> None:
+        self._reactive_swap(sim, mode, now)
+
+    def on_forecast(self, sim: "Simulator", payload: object, now: float) -> None:
+        """Deferred detection: the confirmation window armed at the
+        seam has elapsed — swap to the (by now confirmed) mode.  If the
+        context shifted again meanwhile, that seam armed its own
+        detection event which will re-correct; briefly installing the
+        stale detection's table is exactly what a confirmation-window
+        runtime does."""
+        if (
+            isinstance(payload, tuple)
+            and len(payload) == 2
+            and payload[0] == "detect"
+        ):
+            self._swap_to(sim, self.portfolio.get(payload[1]))
+
+
+@dataclasses.dataclass
+class PredictiveReplanner(OnlineReplanner):
+    """Forecast-driven replanning: pre-swap or blend *ahead* of seams.
+
+    State machine per mode segment:
+
+    1. On entering a mode (run start or ``mode_change``) the replanner
+       asks the :class:`~.forecast.ModeForecaster` for the segment's
+       end.  A forecast with confidence >= ``confidence_lo`` arms a
+       *forecast* scheduling point ``lead_s`` before the predicted
+       switch.
+    2. When that point fires: confidence >= ``confidence_hi``
+       **pre-stages** the target table
+       (:meth:`~repro.core.sim.engine.Simulator.prestage_schedule`) —
+       its weight/feature deltas background-copy over the remaining
+       lead window, charged through the bounded-realloc accounting but
+       freezing nothing, while the active table keeps guiding the
+       outgoing regime; a confidence in ``[lo, hi)`` installs the
+       **blended** table (:func:`blend_schedules` — per-task urgency
+       hedge, no capacity move).  A revert guard is armed
+       ``revert_grace_s`` past the predicted switch.
+    3. At the actual seam the target table is *activated* through the
+       ordinary hot-swap: with a correct pre-stage its weights are
+       already resident, so the seam stall shrinks to live-state
+       preemptions (the part that can never be background-copied)
+       instead of the full migration a reactive swap pays at the worst
+       moment.  A wrong stage falls back to the reactive swap, having
+       wasted only background traffic; a *pre-stage* whose seam never
+       comes is reverted for free — the active table was never touched
+       — while a blend revert swaps the hedged plans back through the
+       ordinary bounded-realloc path (cheap, not free).
+
+    Observed dwells feed back into the forecaster at every seam, and
+    repeated reverts inside one segment exponentially damp re-staging
+    (``revert_backoff``) so a bad forecaster degrades to reactive
+    behaviour instead of thrashing.
+    """
+
+    forecaster: Optional[ModeForecaster] = None
+    #: stage this many seconds before the predicted switch
+    lead_s: float = 0.08
+    #: confidence >= hi: full pre-swap; in [lo, hi): blend; < lo: reactive
+    confidence_hi: float = 0.6
+    confidence_lo: float = 0.25
+    #: undo a stage this long after a predicted switch that never came
+    revert_grace_s: float = 0.1
+    #: per-revert confidence damping within one segment
+    revert_backoff: float = 0.5
+    #: drain-aware activation: after a correct forecast the staged
+    #: table is activated as soon as no partition would have to preempt
+    #: a running job (capacity shrinks wait for stragglers of the old
+    #: mode to drain), forced at the latest this long past the seam.
+    #: 0 activates at the seam unconditionally.
+    max_drain_s: float = 0.08
+    #: drain-poll interval while waiting for stragglers
+    drain_poll_s: float = 0.005
+    forecast_stats: ForecastStats = dataclasses.field(
+        default_factory=ForecastStats
+    )
+    _cur_mode: Optional[str] = dataclasses.field(default=None, repr=False)
+    _entered_at: float = dataclasses.field(default=0.0, repr=False)
+    _staged: Optional[ModeForecast] = dataclasses.field(default=None, repr=False)
+    _staged_blend: bool = dataclasses.field(default=False, repr=False)
+    _staged_at: float = dataclasses.field(default=0.0, repr=False)
+    _segment_reverts: int = dataclasses.field(default=0, repr=False)
+    _epoch: int = dataclasses.field(default=0, repr=False)
+    #: (mode, seam_s, deadline_s) of a drain-deferred activation
+    _pending_act: Optional[tuple] = dataclasses.field(default=None, repr=False)
+
+    # -- engine hooks ----------------------------------------------------
+    def on_run_start(self, sim: "Simulator", mode: str, now: float) -> None:
+        self._cur_mode = mode
+        self._entered_at = now
+        self._arm(sim, now)
+
+    def on_mode_change(self, sim: "Simulator", mode: str, now: float) -> None:
+        if self._cur_mode is not None and self.forecaster is not None:
+            self.forecaster.observe_switch(
+                self._cur_mode, mode, now - self._entered_at
+            )
+        staged = self._staged
+        self._epoch += 1          # stale stage/revert/activate events die here
+        self._pending_act = None
+        stats = self.forecast_stats
+        if staged is None:
+            self._reactive_swap(sim, mode, now)
+        elif staged.target_mode == mode:
+            # correct forecast: activate the pre-staged table (its
+            # weight deltas are resident) or commit the blend's
+            # deferred capacity move.  The forecast told the runtime
+            # what to watch for, so the seam is a *confirmation*, not
+            # an open-set detection — no detection delay.  Activation
+            # is drain-aware: it fires the moment no partition would
+            # preempt a straggler of the outgoing mode, bounded by
+            # ``max_drain_s``; the swap anchors at the true seam so the
+            # rate-aware ERT re-stagger is exact.
+            stats.n_hits += 1
+            stats.lead_s_total += max(0.0, now - self._staged_at)
+            self._activate(sim, mode, now, seam_s=now,
+                           deadline_s=now + self.max_drain_s)
+        else:
+            # wrong forecast: the runtime is watching for the wrong
+            # transition and must detect this one like any reactive
+            # system — the full confirmation window applies
+            stats.n_misses += 1
+            self._reactive_swap(sim, mode, now)
+        self._staged = None
+        self._staged_blend = False
+        self._segment_reverts = 0
+        self._cur_mode = mode
+        self._entered_at = now
+        self._arm(sim, now)
+
+    def _reactive_swap(self, sim: "Simulator", mode: str, now: float) -> None:
+        # unlike the base replanner — where every seam arms a detect
+        # that supersedes the last — a predictive hit activates with no
+        # follow-up event, so a stale detect from an earlier missed
+        # seam would clobber the correct table and nothing would
+        # re-correct it.  Epoch-tag detects so seams kill stale ones.
+        if self.detection_delay_s > 0.0:
+            sim.arm_forecast(
+                now + self.detection_delay_s, ("detect", self._epoch, mode)
+            )
+        else:
+            self._swap_to(sim, self.portfolio.get(mode))
+
+    def on_forecast(self, sim: "Simulator", payload: object, now: float) -> None:
+        if not isinstance(payload, tuple) or len(payload) < 2:
+            return
+        kind = payload[0]
+        if kind == "detect":           # deferred miss/fallback detection
+            if len(payload) == 3 and payload[1] == self._epoch:
+                self._swap_to(sim, self.portfolio.get(payload[2]))
+            return
+        epoch = payload[1]
+        if epoch != self._epoch:
+            return
+        if kind == "stage":
+            self._stage(sim, payload[2], now)
+        elif kind == "revert":
+            self._revert(sim, now)
+        elif kind == "activate":
+            if self._pending_act is not None:
+                mode, seam_s, deadline_s = self._pending_act
+                self._pending_act = None
+                self._activate(sim, mode, now, seam_s, deadline_s)
+
+    # -- internals -------------------------------------------------------
+    def _arm(self, sim: "Simulator", now: float) -> None:
+        if self.forecaster is None or self._cur_mode is None:
+            return
+        f = self.forecaster.forecast(self._cur_mode, self._entered_at, now)
+        if f is None:
+            return
+        self.forecast_stats.n_forecasts += 1
+        conf = f.confidence * (self.revert_backoff ** self._segment_reverts)
+        if conf < self.confidence_lo or self.portfolio.get(f.target_mode) is None:
+            return
+        f = dataclasses.replace(f, confidence=conf)
+        sim.arm_forecast(
+            max(now, f.switch_at_s - self.lead_s), ("stage", self._epoch, f)
+        )
+
+    def _activate(
+        self,
+        sim: "Simulator",
+        mode: str,
+        now: float,
+        seam_s: float,
+        deadline_s: float,
+    ) -> None:
+        """Drain-aware activation of ``mode``'s table: swap as soon as
+        no partition would preempt (every capacity shrink fits under
+        the current allocation), forced at ``deadline_s``."""
+        table = self.portfolio.get(mode)
+        if table is None or table is sim.schedule:
+            return
+        if now + 1e-12 < deadline_s:
+            over = any(
+                table.partitions[p.idx].capacity < p.allocated
+                for p in sim.parts
+            )
+            if over:
+                self._pending_act = (mode, seam_s, deadline_s)
+                sim.arm_forecast(
+                    min(now + self.drain_poll_s, deadline_s),
+                    ("activate", self._epoch),
+                )
+                return
+        self._swap_to(sim, table, regime_anchor_s=seam_s)
+
+    def _stage(self, sim: "Simulator", f: ModeForecast, now: float) -> None:
+        if self._staged is not None:
+            return
+        new = self.portfolio.get(f.target_mode)
+        if new is None or new is sim.schedule:
+            return
+        stats = self.forecast_stats
+        window = max(0.0, f.switch_at_s - now)
+        if f.confidence >= self.confidence_hi:
+            # full pre-stage: background-copy the target table's
+            # weight/feature deltas; the active table — and every
+            # running/pending job — is untouched until the seam
+            stats.n_preswaps += 1
+            stats.prestage_bytes += sim.prestage_schedule(new, window)
+            blend = False
+        else:
+            # low-confidence hedge: install the blended table (plan
+            # urgency only, no capacity move); its few adopted-new-plan
+            # weight deltas background-copy over the same window
+            stats.n_blends += 1
+            stats.prestage_stall_s += self._swap_to(
+                sim, blend_schedules(sim.schedule, new, sim.wf),
+                prestage_window_s=window,
+            )
+            blend = True
+        self._staged = f
+        self._staged_blend = blend
+        self._staged_at = now
+        sim.arm_forecast(
+            f.switch_at_s + self.revert_grace_s, ("revert", self._epoch)
+        )
+
+    def _revert(self, sim: "Simulator", now: float) -> None:
+        if self._staged is None:
+            return
+        stats = self.forecast_stats
+        if self._staged_blend:
+            # undo the plan hedge: swap back to the current mode's own
+            # table.  No capacity ever moved and PENDING jobs were only
+            # retargeted (nothing charged for them), but the tasks the
+            # hedge had moved onto new-regime plans pay their weight
+            # deltas back through the ordinary bounded-realloc stall —
+            # a blend miss is cheap, not free.
+            self._swap_to(sim, self.portfolio.get(self._cur_mode))
+        # a full pre-stage needs no undo at all: the active table was
+        # never touched — the wrong forecast cost exactly the staged
+        # background traffic, already charged
+        stats.n_misses += 1
+        stats.n_reverts += 1
+        self._staged = None
+        self._staged_blend = False
+        self._segment_reverts += 1
+        self._arm(sim, now)

@@ -15,7 +15,17 @@ from typing import Sequence
 
 from ..sim.engine import Job
 
-__all__ = ["fit_quota"]
+__all__ = ["fit_quota", "plan_slack"]
+
+
+def plan_slack(plan, e2e_offset_s: float) -> float:
+    """Downstream slack a scheduling-table entry leaves a task: the gap
+    between its sub-deadline and the tightest E2E deadline offset
+    through it (``Workflow.deadline_offset``).  Smaller slack = the
+    plan's regime is more demanding for this task.  Schedule blending
+    (``repro.core.runtime.replan.blend_schedules``) keys its per-task
+    old-vs-new choice on this."""
+    return e2e_offset_s - plan.subdeadline_s
 
 
 def fit_quota(

@@ -54,12 +54,16 @@ class AdsTilePolicy(Policy):
     # ------------------------------------------------------------------
     def setup(self, sim: Simulator) -> None:
         # per-task DoP candidate cache (hot: FitQuota walks the ladder
-        # at every scheduling point)
-        self._cands = {
-            name: t.dop_candidates()
-            for name, t in sim.wf.tasks.items() if not t.is_sensor
-        }
-        self._cmax = {name: max(c) for name, c in self._cands.items()}
+        # at every scheduling point).  Workflow-derived, so it survives
+        # re-setups after schedule hot-swaps — predictive replanning
+        # re-runs setup() at every stage/commit/revert, and only the
+        # schedule-derived state below actually changes.
+        if not self._cands:
+            self._cands = {
+                name: t.dop_candidates()
+                for name, t in sim.wf.tasks.items() if not t.is_sensor
+            }
+            self._cmax = {name: max(c) for name, c in self._cands.items()}
         # downstream budget per task: tightest over chains (Getddl's
         # relative-timing data, precomputed offline)
         sched = sim.schedule

@@ -43,7 +43,8 @@ from .policy import Policy
 from .trace import Trace, build_skeleton, sample_trace
 
 __all__ = [
-    "Job", "JobState", "ModeStats", "SimConfig", "Simulator", "SimReport",
+    "ForecastStats", "Job", "JobState", "ModeStats", "SimConfig",
+    "Simulator", "SimReport",
 ]
 
 
@@ -234,6 +235,37 @@ class ModeStats:
 
 
 @dataclasses.dataclass
+class ForecastStats:
+    """Pre-stage accounting for predictive replanning.
+
+    Filled by a :class:`~repro.core.runtime.replan.PredictiveReplanner`
+    (the engine copies the replanner's counters into the report).  A
+    *pre-swap* installs the forecast target's full table ahead of the
+    predicted seam; a *blend* installs the low-confidence hedge (old
+    partitions, per-task plan choice by slack).  Hits/misses score the
+    stage against the seam that actually arrived; ``prestage_stall_s``
+    is the swap stall charged *ahead* of seams (it still lands in
+    ``realloc_frac`` — pre-staging moves the cost, it does not hide it),
+    and ``lead_s_total`` sums the realized seam-minus-stage lead.
+    """
+
+    n_forecasts: int = 0
+    n_preswaps: int = 0
+    n_blends: int = 0
+    n_hits: int = 0
+    n_misses: int = 0
+    n_reverts: int = 0             # wrong stage undone before any seam
+    prestage_bytes: float = 0.0    # background-staged weight/feature volume
+    prestage_stall_s: float = 0.0
+    lead_s_total: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        staged = self.n_hits + self.n_misses
+        return self.n_hits / staged if staged else 0.0
+
+
+@dataclasses.dataclass
 class SimReport:
     duration_s: float
     total_tiles: int
@@ -257,6 +289,8 @@ class SimReport:
     # scenario runs only: per-mode accounting + switch count
     mode_stats: Dict[str, ModeStats] = dataclasses.field(default_factory=dict)
     n_mode_switches: int = 0
+    # predictive replanning only: pre-stage accounting
+    forecast: Optional[ForecastStats] = None
 
     @property
     def violation_rate(self) -> float:
@@ -322,6 +356,9 @@ class Simulator:
             _Partition(idx=p.index, capacity=p.capacity)
             for p in schedule.partitions
         ]
+        # weight/feature state already staged in the background by a
+        # predictive pre-stage: task -> (partition, dop) resident plans
+        self._staged_plans: Dict[str, Tuple[int, int]] = {}
         # scenario state: active mode + per-mode accounting buckets
         self._mode_now: Optional[str] = None
         self._mode_busy: Dict[str, float] = {}
@@ -598,7 +635,68 @@ class Simulator:
         part.stall_end = max(part.stall_end, self.now + stall)
         self._push(part.stall_end, "resume", (part.idx,))
 
-    def hotswap_schedule(self, new: Schedule) -> float:
+    def _plan_deltas(self, new: Schedule):
+        """Weight/feature stage-in volume per plan of ``new`` that is
+        not already resident, in deterministic (sorted-task) order:
+        yields ``(task, plan, bytes)``.  A partition move stages the
+        full ``checkpoint_bytes x dop``; staying put costs the L2P
+        minimal ``checkpoint_bytes x |dop delta|``.  Shared by
+        :meth:`prestage_schedule` and :meth:`hotswap_schedule` so
+        background and at-seam staging can never diverge."""
+        for task in sorted(new.plans):
+            plan = new.plans[task]
+            if self._staged_plans.get(task) == (plan.partition, plan.dop):
+                continue
+            old_plan = self.schedule.plans.get(task)
+            if old_plan is None or old_plan.partition != plan.partition:
+                delta = plan.dop
+            else:
+                delta = abs(plan.dop - old_plan.dop)
+            if delta:
+                yield task, plan, self.wf.tasks[task].checkpoint_bytes * delta
+
+    def prestage_schedule(self, new: Schedule, window_s: float) -> float:
+        """Background-stage ``new``'s weight/feature state ahead of a
+        forecast seam *without* touching the active table.
+
+        For every task whose plan under ``new`` differs from the
+        current table, the stage-in volume (``checkpoint_bytes x dop``
+        on a partition move, the L2P minimal ``checkpoint_bytes x
+        |dop delta|`` otherwise) is copied in the background: the next
+        table's state is not live, so the copy is double-buffered and
+        freezes nothing.  ``window_s`` is the forecast lead — each
+        target partition stages whole tasks greedily until
+        ``window_s x migration_bw`` is spent; the residue simply pays
+        the ordinary stall at activation time.  Staged bytes are charged
+        to ``realloc_bytes`` (the traffic is real, and a wrong forecast
+        wastes it honestly), but no partition stalls, no job is touched,
+        and no stall event is counted.
+
+        A later :meth:`hotswap_schedule` that installs matching plans
+        skips the staged volume — activation at the seam then stalls
+        only for live-state preemptions.  Any hot-swap clears the staged
+        set (the buffers are overwritten by the installed table).
+
+        Returns the number of bytes staged.
+        """
+        budget = max(0.0, window_s) * self.hw.realloc.migration_bw
+        spent: Dict[int, float] = {}
+        total = 0.0
+        for task, plan, volume in list(self._plan_deltas(new)):
+            if spent.get(plan.partition, 0.0) + volume > budget:
+                continue
+            spent[plan.partition] = spent.get(plan.partition, 0.0) + volume
+            self.parts[plan.partition].realloc_bytes += volume
+            self._staged_plans[task] = (plan.partition, plan.dop)
+            total += volume
+        return total
+
+    def hotswap_schedule(
+        self,
+        new: Schedule,
+        regime_anchor_s: Optional[float] = None,
+        prestage_window_s: float = 0.0,
+    ) -> float:
         """Online replanning: swap the active scheduling table (the
         ``mode_change`` reaction of the runtime, §IV-C applied across
         contexts).
@@ -612,17 +710,67 @@ class Simulator:
         in ``realloc_frac`` honestly.  PENDING/READY jobs are retargeted
         to the new plans (partition, ERT, sub-deadline, plan DoP).
 
+        A table swap also *stages weights and features*: every task
+        whose plan moved to another partition re-loads its per-tile
+        state there (``checkpoint_bytes x plan dop``), and a task that
+        stays put but changes planned DoP pays the L2P minimal move
+        (``checkpoint_bytes x |dop delta|``).  The volume is charged to
+        the task's *target* partition through the same bounded-realloc
+        stall as everything else — this is the millisecond-scale cost a
+        reactive swap pays exactly when the new mode's load arrives.
+        Swapping to a table with identical plans stages nothing.
+
+        ``prestage_window_s`` is the lead a *predictive* swap has before
+        its regime actually starts: weight/feature stage-in that fits in
+        ``window x migration_bw`` per partition is copied in the
+        background (double-buffered — the next table's state is not
+        live, so the copy needs no stop-the-world) and contributes **no
+        stall**, while the bytes still land in ``realloc_bytes``.  The
+        residual volume, and every live-state checkpoint of a preempted
+        job (which can never be background-copied), stalls the
+        partition as usual.  A reactive swap has no lead: window 0, the
+        full volume freezes the partition at the seam.
+
+        The retarget is *rate-aware*: when the incoming table records
+        per-task periods (``meta["task_period_s"]``, portfolio compiles
+        do) and a task's period differs from the outgoing regime's, the
+        *straddling* PENDING jobs of that task — released on the old
+        cadence (before ``regime_anchor_s``) but admitted after it —
+        re-stagger their ERTs onto the new regime's release grid:
+        ``anchor + k * period`` for the smallest ``k`` at/after the
+        legacy ``release + plan.ert_s``.  Their old-grid releases would
+        otherwise admit them mid-frame of the new cadence, exactly
+        where the new table's reservation windows assume no entry.
+        Jobs released at/after the anchor already sit on the new grid
+        (the piecewise unroll re-anchors sensor timers at the seam) and
+        keep the legacy offset, as do READY jobs (they hold data;
+        delaying them to the next grid tick would starve admitted
+        work).  ``regime_anchor_s`` is where the new regime's timers
+        (re-)anchor: the seam itself for a reactive swap (default:
+        now), the *forecast* seam for a predictive pre-swap.
+
         Returns the summed stall time across partitions.
         """
         if len(new.partitions) != len(self.parts):
             raise ValueError(
                 "hot-swap requires a schedule with the same partition count"
             )
+        # weight/feature staging volume per target partition (plan
+        # deltas); state already background-staged for exactly this
+        # (partition, dop) is resident and moves nothing
+        staged: Dict[int, float] = {}
+        for _task, plan, volume in self._plan_deltas(new):
+            staged[plan.partition] = staged.get(plan.partition, 0.0) + volume
+        # background-copy budget per partition: stage-in volume that the
+        # pre-stage window can overlap with execution (never live state)
+        bg_budget = max(0.0, prestage_window_s) * self.hw.realloc.migration_bw
         total_stall = 0.0
         for part in self.parts:
             new_cap = new.partitions[part.idx].capacity
             self._touch(part)
-            moved = 0.0
+            stage_in = staged.get(part.idx, 0.0)
+            overlapped = min(stage_in, bg_budget)
+            moved = stage_in - overlapped   # residual: stalls the partition
             if part.allocated > new_cap:
                 victims = sorted(part.running, key=lambda j: (part.running[j], j))
                 while part.allocated > new_cap and victims:
@@ -648,8 +796,27 @@ class Simulator:
                 self._advance_job(frozen)
                 frozen.rate = 0.0
                 frozen.gen += 1
-            self._begin_stall(part, moved, stall)
+            # background-copied bytes are still reallocation traffic —
+            # they count, they just do not freeze the partition
+            self._begin_stall(part, moved + overlapped, stall)
             total_stall += stall
+
+        # rate-aware ERT re-stagger: tasks whose period changed between
+        # the outgoing and incoming tables snap PENDING ERTs onto the
+        # new regime's release grid (anchored at the seam)
+        anchor = self.now if regime_anchor_s is None else regime_anchor_s
+        new_periods = new.meta.get("task_period_s") or {}
+        old_periods = self.schedule.meta.get("task_period_s") or {}
+        restagger: Dict[str, float] = {}
+        for task, p_new in new_periods.items():
+            p_old = old_periods.get(task)
+            if p_old is None:
+                t = self.wf.tasks.get(task)
+                if t is None or t.is_sensor:
+                    continue
+                p_old = 1.0 / self.wf.task_rate_hz(task)
+            if p_new > 0 and not math.isclose(p_new, p_old, rel_tol=1e-9):
+                restagger[task] = p_new
 
         # retarget future jobs to the new plans
         for job in self.jobs:
@@ -662,12 +829,23 @@ class Simulator:
                 self._ready_sets[job.partition].discard(job)
                 self._ready_sets[plan.partition].add(job)
             job.partition = plan.partition
-            job.ert = job.release + plan.ert_s
+            ert = job.release + plan.ert_s
+            period = restagger.get(job.task)
+            if (
+                period is not None
+                and job.state == JobState.PENDING
+                and job.release < anchor - 1e-12
+                and ert > anchor + 1e-12
+            ):
+                ert = anchor + math.ceil((ert - anchor) / period - 1e-9) * period
+            job.ert = ert
             job.sub_ddl = job.release + plan.subdeadline_s
             job.plan_dop = plan.dop
             if job.state == JobState.READY and job.ert > self.now:
                 self._push(job.ert, "ert", (job.jid,))
         self.schedule = new
+        # the installed table's state overwrites the staging buffers
+        self._staged_plans.clear()
         return total_stall
 
     def preempt(self, job: Job) -> None:
@@ -708,6 +886,13 @@ class Simulator:
 
     def arm_timer(self, partition: int, t: float, job: Optional[Job] = None) -> None:
         self._push(t, "timer", (partition, job.jid if job else -1))
+
+    def arm_forecast(self, t: float, payload: object = None) -> None:
+        """Arm a *forecast* scheduling point at ``t``: the engine calls
+        ``policy.on_forecast(sim, payload, now)`` when it fires (used by
+        the predictive replanner to wake up ahead of a predicted seam).
+        ``payload`` is opaque to the engine."""
+        self._push(t, "forecast", (payload,))
 
     # ------------------------------------------------------------------
     # dependency propagation
@@ -793,6 +978,11 @@ class Simulator:
                 if mode != prev and t < self.cfg.duration_s:
                     self._push(t, "mode_change", (mode,))
                 prev = mode
+            # a predictive replanner needs to arm its first forecast
+            # before the clock starts (there is no t=0 mode_change)
+            rep = getattr(self.policy, "replanner", None)
+            if rep is not None and hasattr(rep, "on_run_start"):
+                rep.on_run_start(self, self._mode_now, 0.0)
 
         end_t = self.cfg.duration_s
         while self._heap:
@@ -860,6 +1050,8 @@ class Simulator:
                 if job is not None and job.state in (JobState.DONE, JobState.DROPPED):
                     continue
                 self.policy.on_point(self, pid, self.now, "timer", job)
+            elif kind == "forecast":
+                self.policy.on_forecast(self, payload[0], self.now)
             elif kind == "mode_change":
                 mode = payload[0]
                 # split tile-second accounting exactly at the boundary
@@ -983,6 +1175,12 @@ class Simulator:
                     ),
                 )
 
+        # predictive replanning: copy the replanner's pre-stage counters
+        rep = getattr(self.policy, "replanner", None)
+        fstats = getattr(rep, "forecast_stats", None)
+        if fstats is not None and not isinstance(fstats, ForecastStats):
+            fstats = None
+
         return SimReport(
             duration_s=self.cfg.duration_s,
             total_tiles=self.hw.num_tiles,
@@ -1002,4 +1200,5 @@ class Simulator:
             decision_ratios=ratios,
             mode_stats=mode_stats,
             n_mode_switches=self.n_mode_switches,
+            forecast=fstats,
         )

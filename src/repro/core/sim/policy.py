@@ -42,6 +42,15 @@ class Policy:
         if self.replanner is not None:
             self.replanner.on_mode_change(sim, mode, now)
 
+    def on_forecast(self, sim: "Simulator", payload: object, now: float) -> None:
+        """Called when a ``forecast`` scheduling point armed via
+        ``sim.arm_forecast`` fires.  The default delegates to the
+        attached :attr:`replanner` when it understands forecasts (a
+        ``PredictiveReplanner`` does; the reactive one ignores them)."""
+        rep = self.replanner
+        if rep is not None and hasattr(rep, "on_forecast"):
+            rep.on_forecast(sim, payload, now)
+
     def on_point(
         self,
         sim: "Simulator",

@@ -22,7 +22,11 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from ..core.experiment import ExperimentSpec, build_stack, make_policy
-from ..core.runtime import OnlineReplanner, SchedulePortfolio
+from ..core.runtime import (
+    OnlineReplanner,
+    PredictiveReplanner,
+    SchedulePortfolio,
+)
 from ..core.sim import SimConfig, Simulator, SimReport
 from ..core.sim.trace import Trace, build_skeleton, sample_trace
 from .modes import get_mode, register_mode
@@ -51,6 +55,26 @@ class ScenarioSpec(ExperimentSpec):
 
     scenario: Optional[ScenarioScript] = None   # required (kw-only in use)
     replan: bool = True
+    #: how the replanner reacts to context shifts:
+    #:   "reactive"   — hot-swap at the seam (the PR-1 behaviour);
+    #:   "predictive" — forecast-driven: pre-swap the full target table
+    #:                  ahead of high-confidence seams, blend below;
+    #:   "blend"      — hedge-only variant: every staged transition uses
+    #:                  the blended table (ablation of the pre-swap).
+    replan_mode: str = "reactive"
+    #: predictive only: stage this many seconds before the forecast seam
+    forecast_lead_s: float = 0.08
+    #: reactive context-shift confirmation window (seconds): a runtime
+    #: without a forecast detects a mode switch from observed
+    #: statistics, swapping this long after the seam.  0 keeps the
+    #: oracle-reactive behaviour.  A predictive replanner pays it only
+    #: on wrong forecasts (correct forecasts turn detection into
+    #: confirmation).
+    detection_delay_s: float = 0.0
+    #: predictive only: pin switch times from the script itself (the
+    #: route-informed case); False falls back to pure Markov+dwell
+    #: estimation, which can be early, late, or plain wrong
+    route_forecast: bool = True
     duration_s: Optional[float] = None          # None = the scenario's length
     #: precompiled per-mode schedules; None compiles one per run.
     #: sweep() fills this so N scenarios share one portfolio per policy
@@ -65,6 +89,11 @@ class ScenarioSpec(ExperimentSpec):
     def __post_init__(self) -> None:
         if self.scenario is None:
             raise ValueError("ScenarioSpec requires a scenario script")
+        if self.replan_mode not in ("reactive", "predictive", "blend"):
+            raise ValueError(
+                f"unknown replan_mode {self.replan_mode!r} "
+                "(choose from reactive/predictive/blend)"
+            )
 
 
 def compile_portfolio(
@@ -124,7 +153,21 @@ def run_scenario(spec: ScenarioSpec, trace: Optional[Trace] = None) -> SimReport
 
     policy = make_policy(spec.policy)
     if spec.replan:
-        policy.replanner = OnlineReplanner(portfolio)
+        if spec.replan_mode == "reactive":
+            policy.replanner = OnlineReplanner(
+                portfolio, detection_delay_s=spec.detection_delay_s
+            )
+        else:
+            kw = dict(
+                forecaster=scen.forecaster(route_informed=spec.route_forecast),
+                lead_s=spec.forecast_lead_s,
+                detection_delay_s=spec.detection_delay_s,
+            )
+            if spec.replan_mode == "blend":
+                # hedge-only ablation: no forecast is confident enough
+                # for a full pre-swap, every stage blends
+                kw["confidence_hi"] = 2.0
+            policy.replanner = PredictiveReplanner(portfolio, **kw)
 
     sim = Simulator(
         wf, model, sched, policy,
@@ -175,12 +218,24 @@ def parallel_map(
 # ---------------------------------------------------------------------------
 def summarize(spec: ScenarioSpec, report: SimReport) -> Dict[str, object]:
     """Flatten one run into a picklable summary row."""
+    fc = report.forecast
     return {
         "scenario": spec.scenario.name,
         "script": spec.scenario.to_string(),
         "policy": spec.policy,
         "replan": spec.replan,
+        "replan_mode": spec.replan_mode,
         "seed": spec.seed,
+        "forecast": None if fc is None else {
+            "n_forecasts": fc.n_forecasts,
+            "n_preswaps": fc.n_preswaps,
+            "n_blends": fc.n_blends,
+            "n_hits": fc.n_hits,
+            "n_misses": fc.n_misses,
+            "n_reverts": fc.n_reverts,
+            "hit_rate": fc.hit_rate,
+            "prestage_stall_s": fc.prestage_stall_s,
+        },
         "violation_rate": report.violation_rate,
         "task_miss_rate": report.task_miss_rate,
         "effective_frac": report.effective_frac,
@@ -190,6 +245,8 @@ def summarize(spec: ScenarioSpec, report: SimReport) -> Dict[str, object]:
         "per_mode": {
             m: {
                 "span_s": s.span_s,
+                "n_completed": s.n_completed,
+                "n_violations": s.n_violations,
                 "violation_rate": s.violation_rate,
                 # None rather than NaN: NaN breaks row equality and JSON
                 "p99_s": None if math.isnan(s.p99_s) else s.p99_s,

@@ -126,6 +126,56 @@ class ScenarioScript:
                 return s.mode
         return self.segments[-1].mode
 
+    # -- forecast hooks ---------------------------------------------------
+    def next_switch(self, t: float) -> Optional[Tuple[float, str]]:
+        """``(switch_time, next_mode)`` for the first mode *change*
+        strictly after ``t``, or ``None`` past the last seam.
+
+        This is the route-informed forecast source: a scenario script
+        *is* the planned route, so feeding it to a
+        :class:`~repro.core.runtime.ModeForecaster` as ``timeline``
+        models a navigation stack that knows the on-ramp is coming
+        (switch times exact, confidence still bounded by the Markov
+        structure — routes get re-planned).
+        """
+        acc = 0.0
+        for i, s in enumerate(self.segments[:-1]):
+            acc += s.duration_s
+            nxt = self.segments[i + 1].mode
+            if acc > t + 1e-12 and nxt != s.mode:
+                return acc, nxt
+        return None
+
+    def empirical_transitions(
+        self,
+    ) -> Tuple[Dict[str, Dict[str, float]], Dict[str, float]]:
+        """``(transitions, mean_dwell_s)`` estimated from the script's
+        own segment bigrams — the Markov structure a fleet would learn
+        from logged drives of this route.  Modes with no outgoing
+        segment get an empty row (absorbing)."""
+        trans: Dict[str, Dict[str, float]] = {m: {} for m in self.modes()}
+        dwell_sum: Dict[str, float] = {}
+        dwell_n: Dict[str, int] = {}
+        for i, s in enumerate(self.segments):
+            dwell_sum[s.mode] = dwell_sum.get(s.mode, 0.0) + s.duration_s
+            dwell_n[s.mode] = dwell_n.get(s.mode, 0) + 1
+            if i + 1 < len(self.segments):
+                nxt = self.segments[i + 1].mode
+                row = trans[s.mode]
+                row[nxt] = row.get(nxt, 0.0) + 1.0
+        mean_dwell = {m: dwell_sum[m] / dwell_n[m] for m in dwell_sum}
+        return trans, mean_dwell
+
+    def forecaster(self, route_informed: bool = True, **kw):
+        """A :class:`~repro.core.runtime.ModeForecaster` primed with
+        this script's empirical Markov structure; ``route_informed``
+        additionally pins exact switch times from the timeline."""
+        from ..core.runtime.forecast import ModeForecaster
+
+        return ModeForecaster.from_script(
+            self, use_timeline=route_informed, **kw
+        )
+
     def burst_scale(self, task: str, t: float) -> float:
         scale = 1.0
         for b in self.bursts:

@@ -1,0 +1,101 @@
+"""Benchmark-harness CLI tests: ``run.py --out`` path handling / row
+parsing, and the CI perf-regression gate (``benchmarks.check_perf``)."""
+import json
+
+import pytest
+
+from benchmarks import check_perf
+from benchmarks import run as bench_run
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run --out
+# ---------------------------------------------------------------------------
+def _dummy_suite(duration: float = 1.0, seed: int = 1) -> None:
+    print(f"dummy_row,{123.0 * duration:.3f},seed={seed}")
+
+
+def test_run_out_creates_missing_parent_dirs(tmp_path, monkeypatch):
+    out = tmp_path / "deeply" / "nested" / "dir" / "bench.json"
+    monkeypatch.setitem(bench_run.SUITES, "dummy", _dummy_suite)
+    monkeypatch.setattr(
+        "sys.argv",
+        ["run.py", "--only", "dummy", "--duration", "2.0", "--out", str(out)],
+    )
+    bench_run.main()
+    data = json.loads(out.read_text())
+    assert data["suites"] == ["dummy"]
+    assert data["duration"] == 2.0
+    assert data["rows"] == [
+        {"name": "dummy_row", "us_per_call": 246.0, "derived": "seed=1"}
+    ]
+
+
+def test_rows_from_csv_skips_headers_and_junk():
+    text = (
+        "name,us_per_call,derived\n"
+        "row_a,1.500,x=1\n"
+        "# comment done in 3s\n"
+        "row_b,2.000,\n"
+        "not_a_row\n"
+    )
+    rows = bench_run._rows_from_csv(text)
+    assert [r["name"] for r in rows] == ["row_a", "row_b"]
+    assert rows[0]["derived"] == "x=1"
+
+
+def test_unknown_suite_errors(monkeypatch, capsys):
+    monkeypatch.setattr("sys.argv", ["run.py", "--only", "no_such_suite"])
+    with pytest.raises(SystemExit):
+        bench_run.main()
+    assert "no_such_suite" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.check_perf (CI perf gate)
+# ---------------------------------------------------------------------------
+def _bench_json(path, us, name="perf_sweep_e2e"):
+    path.write_text(json.dumps({
+        "suites": ["perf"], "duration": 1.0, "seed": 1,
+        "rows": [{"name": name, "us_per_call": us, "derived": ""}],
+    }))
+    return path
+
+
+def test_check_perf_passes_within_threshold(tmp_path):
+    base = _bench_json(tmp_path / "base.json", 100_000.0)
+    fresh = _bench_json(tmp_path / "fresh.json", 140_000.0)
+    ratio, ok = check_perf.check(base, fresh)
+    assert ok and ratio == pytest.approx(1.4)
+    assert check_perf.main([str(base), str(fresh)]) == 0
+
+
+def test_check_perf_fails_on_regression(tmp_path):
+    base = _bench_json(tmp_path / "base.json", 100_000.0)
+    fresh = _bench_json(tmp_path / "fresh.json", 151_000.0)
+    ratio, ok = check_perf.check(base, fresh)
+    assert not ok and ratio == pytest.approx(1.51)
+    assert check_perf.main([str(base), str(fresh)]) == 2
+    # a looser explicit threshold lets the same pair through
+    assert check_perf.main(
+        [str(base), str(fresh), "--threshold", "2.0"]
+    ) == 0
+
+
+def test_check_perf_missing_metric_raises(tmp_path):
+    base = _bench_json(tmp_path / "base.json", 100_000.0, name="other_row")
+    fresh = _bench_json(tmp_path / "fresh.json", 100_000.0)
+    with pytest.raises(KeyError):
+        check_perf.check(base, fresh)
+
+
+def test_committed_baseline_has_the_gated_metric():
+    """The gate in ci.yml compares against the committed BENCH_sim.json;
+    that file must keep the pinned-sweep row."""
+    from pathlib import Path
+
+    repo = Path(__file__).resolve().parent.parent
+    row = check_perf.load_metric(
+        repo / "BENCH_sim.json", check_perf.DEFAULT_METRIC
+    )
+    assert row["us_per_call"] > 0

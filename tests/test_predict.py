@@ -1,0 +1,355 @@
+"""Predictive replanning tests: forecaster structure, route-informed
+forecasts, schedule blending by slack, background pre-staging,
+rate-aware ERT re-staggering at hot-swap, wrong-forecast reverts (no
+double charge), and the paired reactive-vs-predictive acceptance on
+``rate_churn``."""
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.experiment import build_stack, make_policy
+from repro.core.runtime import (
+    ModeForecaster,
+    OnlineReplanner,
+    PredictiveReplanner,
+    SchedulePortfolio,
+    blend_schedules,
+    plan_slack,
+)
+from repro.core.sim import SimConfig, Simulator
+from repro.scenarios import (
+    ScenarioScript,
+    ScenarioSpec,
+    get_mode,
+    get_scenario,
+    run_scenario,
+)
+from repro.scenarios.runner import build_trace, compile_portfolio
+
+
+# ---------------------------------------------------------------------------
+# forecast hooks on ScenarioScript
+# ---------------------------------------------------------------------------
+def test_script_next_switch_and_empirical_structure():
+    s = ScenarioScript.parse("urban:0.5 highway:1.0 urban:0.5")
+    assert s.next_switch(0.0) == (0.5, "highway")
+    assert s.next_switch(0.2) == (0.5, "highway")
+    assert s.next_switch(0.7) == (1.5, "urban")
+    assert s.next_switch(1.6) is None
+    trans, dwell = s.empirical_transitions()
+    assert trans["urban"] == {"highway": 1.0}
+    assert trans["highway"] == {"urban": 1.0}
+    assert np.isclose(dwell["urban"], 0.5)
+    assert np.isclose(dwell["highway"], 1.0)
+
+
+def test_route_informed_forecaster_pins_switch_times():
+    s = ScenarioScript.parse("urban:0.5 highway:1.0 urban:0.5")
+    fc = s.forecaster()
+    f = fc.forecast("urban", entered_at_s=0.0, now_s=0.2)
+    assert f.target_mode == "highway"
+    assert np.isclose(f.switch_at_s, 0.5)
+    assert f.confidence >= 0.95
+    assert np.isclose(f.horizon_s, 0.3)
+    # past the last seam the route has nothing to predict
+    assert fc.forecast("urban", entered_at_s=1.5, now_s=1.6) is None
+
+
+def test_markov_forecaster_prediction_and_dwell_learning():
+    fc = ModeForecaster(
+        transitions={"urban": {"highway": 0.7, "parking": 0.2, "urban": 0.1}},
+        mean_dwell_s={"urban": 0.8},
+    )
+    f = fc.forecast("urban", entered_at_s=1.0)
+    assert f.target_mode == "highway"          # most likely non-self successor
+    assert np.isclose(f.switch_at_s, 1.8)      # prior mean dwell
+    assert 0.0 < f.confidence < 1.0
+    # an overdue segment predicts an imminent switch, never one in the past
+    late = fc.forecast("urban", entered_at_s=0.0, now_s=5.0)
+    assert late.switch_at_s > 5.0
+    # observed dwells pull the estimate off the prior
+    for _ in range(20):
+        fc.observe_switch("urban", "highway", 0.4)
+    mean, _cv = fc.dwell_estimate("urban")
+    assert 0.4 < mean < 0.6
+    # observed transitions reshape the successor distribution
+    for _ in range(50):
+        fc.observe_switch("urban", "parking", 0.4)
+    assert fc.forecast("urban", entered_at_s=0.0).target_mode == "parking"
+
+
+def test_forecaster_absorbing_mode_returns_none():
+    fc = ModeForecaster(transitions={"urban": {}}, mean_dwell_s={"urban": 1.0})
+    assert fc.forecast("urban", entered_at_s=0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# schedule blending by slack
+# ---------------------------------------------------------------------------
+def _portfolio_for(script, policy="ads_tile", seed=1, **kw):
+    spec = ScenarioSpec(scenario=script, policy=policy, seed=seed, **kw)
+    wf, _hw, model, compiler = build_stack(spec)
+    pf = compile_portfolio(spec, script.modes())
+    return spec, wf, model, pf
+
+
+def test_blend_schedules_per_task_choice_by_slack():
+    script = ScenarioScript.parse("urban:0.8 night:0.8")
+    _spec, wf, _model, pf = _portfolio_for(script)
+    old, new = pf.schedules["urban"], pf.schedules["night"]
+    blend = blend_schedules(old, new, wf)
+    # partitions: the old capacities, untouched (no capacity move yet)
+    assert [p.capacity for p in blend.partitions] == \
+           [p.capacity for p in old.partitions]
+    caps = {p.index: p.capacity for p in blend.partitions}
+    for task, plan in blend.plans.items():
+        op, np_ = old.plans[task], new.plans[task]
+        e2e = wf.deadline_offset(task)
+        want = np_ if plan_slack(np_, e2e) > plan_slack(op, e2e) else op
+        assert plan.partition == want.partition
+        # the chosen plan's sub-deadline is the more urgent of the two
+        assert plan.subdeadline_s == min(op.subdeadline_s, np_.subdeadline_s)
+        assert plan.dop <= caps[plan.partition]
+    assert blend.meta["blend_of"] == ("urban", "night")
+    # the blend carries the *outgoing* regime's periods so a later full
+    # swap still detects the rate change at the real seam
+    assert blend.meta["task_period_s"] == old.meta["task_period_s"]
+
+
+# ---------------------------------------------------------------------------
+# rate-aware hot-swap: ERT re-stagger + background pre-staging
+# ---------------------------------------------------------------------------
+def _seam_sim(script, duration=1.6, seed=3):
+    spec = ScenarioSpec(scenario=script, policy="ads_tile", seed=seed)
+    wf, _hw, model, _compiler = build_stack(spec)
+    pf = compile_portfolio(spec, script.modes())
+    init = script.segments[0].mode
+    sim = Simulator(
+        wf, model, pf.schedules[init], make_policy("ads_tile"),
+        SimConfig(duration_s=duration, seed=seed, scenario=script),
+    )
+    return sim, pf
+
+
+def test_hotswap_restaggers_straddler_erts_onto_new_grid():
+    script = ScenarioScript.parse("urban:0.8 rush_hour:0.8")
+    sim, pf = _seam_sim(script)
+    old, new = sim.schedule, pf.schedules["rush_hour"]
+    changed = {
+        t: p_new for t, p_new in new.meta["task_period_s"].items()
+        if not math.isclose(p_new, old.meta["task_period_s"][t], rel_tol=1e-9)
+    }
+    assert "optical_flow" in changed            # camera-gated: 30 -> 60 Hz
+    seam = 0.8
+    legacy = {
+        j.jid: j.release + new.plans[j.task].ert_s
+        for j in sim.jobs if not j.is_sensor and j.task in changed
+    }
+    sim.now = seam
+    sim.hotswap_schedule(new, regime_anchor_s=seam)
+    straddlers = 0
+    for j in sim.jobs:
+        if j.is_sensor or j.task not in changed:
+            continue
+        if j.release < seam - 1e-12 and legacy[j.jid] > seam + 1e-12:
+            # straddler: released on the old cadence, admitted after the
+            # seam -> ERT lands exactly on the new release grid, at or
+            # after its legacy offset
+            k = (j.ert - seam) / changed[j.task]
+            assert abs(k - round(k)) < 1e-6, (j.task, j.ert)
+            assert j.ert >= legacy[j.jid] - 1e-9
+            assert j.ert - legacy[j.jid] < changed[j.task] + 1e-9
+            straddlers += 1
+        else:
+            # post-seam releases already sit on the new grid: legacy
+            # retarget applies
+            assert np.isclose(j.ert, legacy[j.jid])
+    assert straddlers > 0
+
+
+def test_prestage_charges_bytes_but_touches_nothing():
+    script = ScenarioScript.parse("urban:0.8 rush_hour:0.8")
+    sim, pf = _seam_sim(script)
+    new = pf.schedules["rush_hour"]
+    before = [(j.state, j.ert, j.partition, j.n_resizes) for j in sim.jobs]
+    sim.now = 0.7
+    staged = sim.prestage_schedule(new, window_s=0.1)
+    assert staged > 0
+    assert sum(p.realloc_bytes for p in sim.parts) == staged
+    assert sum(p.n_realloc for p in sim.parts) == 0      # no stall event
+    assert not any(p.stalled for p in sim.parts)
+    assert sim.schedule is not new                       # table untouched
+    assert before == [
+        (j.state, j.ert, j.partition, j.n_resizes) for j in sim.jobs
+    ]
+    # activation now finds the weights resident: zero staged volume, so
+    # the swap stall is the bare control-plane constant
+    sim.now = 0.8
+    stall = sim.hotswap_schedule(new, regime_anchor_s=0.8)
+    assert sum(p.realloc_bytes for p in sim.parts) == staged  # not re-charged
+    bare = sum(
+        sim.hw.realloc_latency(0.0, max(p.capacity, 1)) for p in new.partitions
+    )
+    assert np.isclose(stall, bare)
+
+
+def test_prestage_respects_background_budget():
+    script = ScenarioScript.parse("urban:0.8 rush_hour:0.8")
+    sim, pf = _seam_sim(script)
+    new = pf.schedules["rush_hour"]
+    assert sim.prestage_schedule(new, window_s=0.0) == 0.0
+    tiny = sim.prestage_schedule(new, window_s=1e-7)     # ~10 KB budget
+    full_sim, _ = _seam_sim(script)
+    full = full_sim.prestage_schedule(new, window_s=10.0)
+    assert tiny < full
+
+
+# ---------------------------------------------------------------------------
+# wrong forecasts: reverts, and nothing double-charged
+# ---------------------------------------------------------------------------
+def test_wrong_forecast_reverts_without_touching_jobs():
+    # the script never leaves urban, but the forecaster is convinced a
+    # rush-hour seam is imminent: stages fire, seams never come, reverts
+    # follow.  A full pre-stage never touches the active table, so the
+    # wrong forecast costs background traffic only - no swap, no stall,
+    # no job charged.
+    script = ScenarioScript.parse("urban:1.6")
+    sim, pf = _seam_sim(script)
+    pf.schedules["rush_hour"] = compile_portfolio(
+        ScenarioSpec(scenario=ScenarioScript.parse("rush_hour:1.6"),
+                     policy="ads_tile", seed=3),
+        ("rush_hour",),
+    ).schedules["rush_hour"]
+    fc = ModeForecaster(
+        transitions={"urban": {"rush_hour": 1.0}, "rush_hour": {"urban": 1.0}},
+        mean_dwell_s={"urban": 0.4, "rush_hour": 0.4},
+    )
+    rep = PredictiveReplanner(pf, forecaster=fc, confidence_hi=0.0,
+                              confidence_lo=0.0)
+    sim.policy.replanner = rep
+    urban_table = sim.schedule
+    r = sim.run()
+    assert r.forecast is rep.forecast_stats
+    assert rep.forecast_stats.n_reverts >= 1
+    assert rep.forecast_stats.n_hits == 0
+    assert rep.forecast_stats.n_preswaps >= 1
+    assert rep.forecast_stats.prestage_bytes > 0
+    # the wrong stages charged traffic but never swapped or stalled
+    assert sim.schedule is urban_table
+    assert rep.n_swaps == 0
+    assert rep.total_stall_s == 0.0
+
+
+def test_stale_detect_event_cannot_clobber_a_later_seam():
+    """A predictive miss arms a detection event; if the next seam
+    arrives (and activates correctly) before that event fires, the
+    stale detect must die with its epoch instead of installing the
+    old target over the correct table."""
+    script = ScenarioScript.parse("urban:0.4 night:0.4 rush_hour:0.8")
+    sim, pf = _seam_sim(script)
+    rep = PredictiveReplanner(pf, forecaster=None, detection_delay_s=0.1)
+    sim.policy.replanner = rep
+    rep.on_run_start(sim, "urban", 0.0)
+    # seam 1 (no stage -> miss path): arms detect("night") at 0.5
+    sim.now = 0.4
+    rep.on_mode_change(sim, "night", 0.4)
+    e1 = rep._epoch
+    assert sim.schedule is pf.schedules["urban"]     # not yet detected
+    # seam 2 lands before that detect fires
+    sim.now = 0.45
+    rep.on_mode_change(sim, "rush_hour", 0.45)
+    e2 = rep._epoch
+    # the stale detect fires: epoch mismatch, must not swap to night
+    sim.now = 0.5
+    rep.on_forecast(sim, ("detect", e1, "night"), 0.5)
+    assert sim.schedule is not pf.schedules["night"]
+    # the live detect installs the correct table
+    sim.now = 0.55
+    rep.on_forecast(sim, ("detect", e2, "rush_hour"), 0.55)
+    assert sim.schedule is pf.schedules["rush_hour"]
+
+
+def test_reactive_detection_delay_defers_the_swap():
+    script = ScenarioScript.parse("urban:0.5 night:0.5")
+    sim, pf = _seam_sim(script, duration=1.0)
+    rep = OnlineReplanner(pf, detection_delay_s=0.1)
+    sim.policy.replanner = rep
+    swap_times = []
+    orig = Simulator.hotswap_schedule
+
+    def record(self, *a, **kw):
+        swap_times.append(self.now)
+        return orig(self, *a, **kw)
+
+    Simulator.hotswap_schedule = record
+    try:
+        sim.run()
+    finally:
+        Simulator.hotswap_schedule = orig
+    assert swap_times and np.isclose(swap_times[0], 0.6)   # seam 0.5 + 0.1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end predictive runs
+# ---------------------------------------------------------------------------
+def test_predictive_run_reports_forecast_stats():
+    scen = get_scenario("rate_churn")
+    r = run_scenario(ScenarioSpec(scenario=scen, policy="ads_tile", seed=3,
+                                  replan_mode="predictive"))
+    assert r.forecast is not None
+    assert r.forecast.n_hits == len(scen.segments) - 1
+    assert r.forecast.n_misses == 0
+    assert r.forecast.prestage_bytes > 0
+    assert r.n_mode_switches == len(scen.segments) - 1
+    # reactive and pinned runs carry no forecast accounting
+    r2 = run_scenario(ScenarioSpec(scenario=scen, policy="ads_tile", seed=3))
+    assert r2.forecast is None
+
+
+def test_predictive_determinism():
+    spec = ScenarioSpec(scenario=get_scenario("rate_churn"), policy="ads_tile",
+                        seed=5, replan_mode="predictive",
+                        detection_delay_s=0.08)
+    a, b = run_scenario(spec), run_scenario(spec)
+    assert a.violation_rate == b.violation_rate
+    assert a.realloc_frac == b.realloc_frac
+    assert dataclasses.asdict(a.forecast) == dataclasses.asdict(b.forecast)
+
+
+def test_predictive_beats_reactive_on_rate_churn():
+    """Acceptance: over paired seeds of ``rate_churn`` with a realistic
+    detection window, predictive pre-staging strictly reduces post-seam
+    deadline misses and realloc waste vs reactive replanning."""
+    scen = get_scenario("rate_churn")
+    base = ScenarioSpec(scenario=scen, policy="ads_tile", seed=1,
+                        detection_delay_s=0.08)
+    pf = compile_portfolio(base)
+    tot = {m: [0, 0.0] for m in ("reactive", "predictive")}
+    for seed in (1, 2, 3):
+        spec = dataclasses.replace(base, seed=seed, portfolio=pf)
+        trace = build_trace(spec)
+        init = scen.segments[0].mode
+        for mode in tot:
+            r = run_scenario(dataclasses.replace(spec, replan_mode=mode),
+                             trace=trace)
+            tot[mode][0] += sum(
+                s.n_violations for m, s in r.mode_stats.items() if m != init
+            )
+            tot[mode][1] += r.realloc_frac
+    assert tot["predictive"][0] < tot["reactive"][0]
+    assert tot["predictive"][1] < tot["reactive"][1]
+
+
+def test_portfolio_meta_records_task_periods():
+    wf, _hw, model, _compiler = build_stack(
+        ScenarioSpec(scenario=get_scenario("rate_churn"), policy="ads_tile")
+    )
+    pf = SchedulePortfolio.compile(
+        model, wf, {m: get_mode(m) for m in ("urban", "rush_hour")},
+    )
+    per = pf.schedules["rush_hour"].meta["task_period_s"]
+    assert np.isclose(per["optical_flow"], 1.0 / 60.0)
+    assert np.isclose(
+        pf.schedules["urban"].meta["task_period_s"]["optical_flow"], 1.0 / 30.0
+    )
