@@ -18,7 +18,8 @@ default threshold is a generous 1.5x — it exists to catch
 order-of-magnitude engine regressions (an accidentally quadratic loop,
 a lost cache), not single-digit percentages.  When a PR legitimately
 changes the perf envelope, refresh the baseline (see
-``docs/performance.md``) in the same PR.
+``docs/performance.md``; CI's ``refresh-baseline`` job measures a
+candidate on a hosted runner) in the same PR.
 """
 from __future__ import annotations
 

@@ -3,7 +3,8 @@ the dry-run artifacts, plus the §Scenarios table from any saved
 scenario/rate-sweep runs:  PYTHONPATH=src python -m benchmarks.make_tables
 
 Scenario inputs are the JSON files written by
-``python -m benchmarks.run --only figS_scenarios,figS_rates,figS_predict
+``python -m benchmarks.run
+--only figS_scenarios,figS_rates,figS_predict,figS_budget
 --out benchmarks/results/scenarios/<name>.json`` (CI uploads one per
 run as a workflow artifact — including the weekly extended sweep; drop
 downloaded artifacts into that directory to render them alongside the

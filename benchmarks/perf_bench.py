@@ -8,10 +8,11 @@ visible in CI artifacts (``BENCH_sim.json`` via ``benchmarks.run
    standard heavy workload (cockpit_replicas=4, 2 s horizon), both the
    single-build pattern and the paired-sweep pattern (one sampled
    trace shared across two policies, the steady state of ``sweep()``).
-2. **Sampling kernel** — the batched counter-based trace sampler vs
-   the legacy per-job scalar ``RandomState`` path on the same skeleton
-   (:func:`repro.core.sim.trace.scalar_reference_trace`), a
-   machine-independent speedup ratio.
+2. **Sampling kernel** — throughput of the batched counter-based trace
+   sampler on the standard skeleton (jobs sampled per second; the
+   legacy scalar ``RandomState`` reference it was once compared
+   against is gone — the counter-based stream contract is the only
+   sampling path).
 3. **End-to-end sweep** — wall-clock for a pinned Monte-Carlo sweep
    (fixed 6-mode Markov generator, so the workload stays comparable as
    bundled defaults evolve), the figS_scenarios fleet view.
@@ -29,11 +30,7 @@ import time
 
 from repro.core.experiment import ExperimentSpec, build_stack, make_policy
 from repro.core.sim import SimConfig, Simulator
-from repro.core.sim.trace import (
-    build_skeleton,
-    sample_trace,
-    scalar_reference_trace,
-)
+from repro.core.sim.trace import build_skeleton, sample_trace
 from repro.scenarios import sweep
 from repro.scenarios.script import MarkovScenarioGenerator
 
@@ -99,21 +96,14 @@ def _build_benchmark(duration: float, seed: int) -> None:
          f"jobs_per_s={jps:.0f};"
          f"speedup_vs_prepr={jps / PREPR_BUILD_JOBS_PER_S:.2f}")
 
-    # sampling kernel: batched vs legacy scalar path, same skeleton
+    # sampling kernel: batched counter-based draws, same skeleton
     skel = build_skeleton(wf, None, 2.0)
     t0 = time.perf_counter()
     for i in range(reps):
         sample_trace(skel, model, None, seed + i)
     dt_batched = time.perf_counter() - t0
-    scalar_reps = max(1, reps // 4)
-    t0 = time.perf_counter()
-    for i in range(scalar_reps):
-        scalar_reference_trace(skel, model, None, seed + i)
-    dt_scalar = (time.perf_counter() - t0) * reps / scalar_reps
     emit("perf_sample_batched", dt_batched / reps * 1e6,
-         f"jobs_per_s={skel.n * reps / dt_batched:.0f};"
-         f"scalar_ref_jobs_per_s={skel.n * reps / dt_scalar:.0f};"
-         f"speedup_vs_scalar={dt_scalar / dt_batched:.1f}")
+         f"jobs_per_s={skel.n * reps / dt_batched:.0f}")
 
 
 def _sweep_benchmark(duration: float, seed: int) -> None:

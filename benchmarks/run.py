@@ -26,7 +26,7 @@ import time
 from pathlib import Path
 
 from . import fig6_casestudy, fig11_ablation, fig12_e2e, fig13_scaling
-from . import figS_predict, figS_rates, figS_scenarios, headroom
+from . import figS_budget, figS_predict, figS_rates, figS_scenarios, headroom
 from . import perf_bench, roofline, table2_overhead
 
 SUITES = {
@@ -37,6 +37,7 @@ SUITES = {
     "figS": figS_scenarios.run,
     "figS_rates": figS_rates.run,
     "figS_predict": figS_predict.run,
+    "figS_budget": figS_budget.run,
     "perf": perf_bench.run,
     "table2": table2_overhead.run,
     "headroom": headroom.run,
@@ -45,7 +46,8 @@ SUITES = {
 
 #: CLI conveniences: the scenario suites also answer to their module names
 ALIASES = {"figS_scenarios": "figS", "rates": "figS_rates",
-           "predict": "figS_predict", "perf_bench": "perf"}
+           "predict": "figS_predict", "budget": "figS_budget",
+           "perf_bench": "perf"}
 
 
 def _rows_from_csv(text: str) -> list:

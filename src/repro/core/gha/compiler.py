@@ -28,16 +28,26 @@ class GHACompiler:
     ``num_partitions=1`` yields the Tp-driven view (single shared bin);
     ``num_partitions=None`` keeps one bin per chain (the Cyc. view);
     intermediate values give ADS-Tile's configurable isolation domains.
+
+    ``tile_budget`` caps the tiles the schedule may *reserve* below the
+    hardware's ``M`` (Phases I and III solve against the budget; the
+    mesh and ``Schedule.total_tiles`` stay the hardware's).  The
+    tile-budget autotuner sweeps this to trace how few tiles a
+    workload actually needs at a given service level — ``None`` keeps
+    the classic full-chip compile.
     """
 
     q: float = 0.95
     num_partitions: Optional[int] = 4
     phase2_weights: Tuple[float, float, float] = (1.0, 2.0, 8.0)
     bind_physical: bool = True
+    tile_budget: Optional[int] = None
 
     def compile(self, model: LatencyModel, wf: Workflow) -> Schedule:
         hw = model.hw
         m = hw.num_tiles
+        if self.tile_budget is not None:
+            m = max(1, min(int(self.tile_budget), m))
 
         p1 = run_phase1(model, wf, self.q, tile_cap=m)
 
@@ -106,12 +116,13 @@ class GHACompiler:
             plans=plans,
             partitions=partitions,
             q=self.q,
-            total_tiles=m,
+            total_tiles=hw.num_tiles,
             meta={
                 "phase1_infeasible": p1.infeasible_chains,
                 "phase3_violations": p3.deadline_violations,
                 "phase2_score": p2.score,
                 "num_partitions": len(partitions),
+                "tile_budget": m,
             },
         )
         sched.validate()

@@ -277,10 +277,15 @@ class LatencyModel:
         self.hw = hw
         # (task, q, c) -> L_v(q, c): profiles are frozen, so bounds are
         # immutable per model.  best_dop / min_dop_for_budget / the GHA
-        # phases and the portfolio q-relaxation ladder recompute the
-        # same bounds many times per compile; the cache makes repeats a
-        # dict hit.
+        # phases and the portfolio autotuner recompute the same bounds
+        # many times per compile; the cache makes repeats a dict hit.
         self._bound_cache: Dict[Tuple[str, float, int], float] = {}
+        # (task, q, candidate tuple) -> bound tuple: the frontier search
+        # walks whole candidate ladders per (task, q); see bound_ladder
+        self._ladder_cache: Dict[Tuple[str, float, tuple], Tuple[float, ...]] = {}
+        # task tuple -> flattened per-task parameter arrays for the
+        # vectorized bound_batch path (see _batch_params)
+        self._batch_cache: Dict[Tuple[str, ...], tuple] = {}
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -340,18 +345,107 @@ class LatencyModel:
     def mean(self, task: str, c: int) -> float:
         return self.profiles[task].mean_latency(c, self.hw.tile_flops)
 
+    def bound_ladder(
+        self, task: str, q: float, cands: Tuple[int, ...]
+    ) -> Tuple[float, ...]:
+        """L_v(q, c) for a whole DoP-candidate tuple at one (task, q).
+
+        The per-(task, q) quantiles ``W_v^(q)`` and ``I_v^(q)`` are
+        computed once and the ladder over ``c`` is filled arithmetically
+        — the autotuner's frontier search and the solvers' candidate
+        walks re-evaluate the same ladders constantly, and computing
+        ``ndtri`` per rung was the dominant cost.  Memoized per
+        ``(task, q, cands)``.
+        """
+        key = (task, q, cands)
+        hit = self._ladder_cache.get(key)
+        if hit is not None:
+            return hit
+        prof = self.profiles[task]
+        if prof.is_sensor:
+            lat = prof.sensor_latency.quantile(q)
+            out = tuple(lat for _ in cands)
+        else:
+            wq = prof.work.quantile(q)
+            iq = prof.io.quantile(q)
+            tf = self.hw.tile_flops
+            sync = prof.sync_per_tile_s
+            out = tuple(wq / (c * tf) + sync * (c - 1) + iq for c in cands)
+        self._ladder_cache[key] = out
+        bc = self._bound_cache
+        for c, l in zip(cands, out):
+            bc.setdefault((task, q, c), l)
+        return out
+
+    def _batch_params(self, tasks: Tuple[str, ...]) -> tuple:
+        """Per-task distribution parameters flattened to arrays for
+        :meth:`bound_batch` (cached per task tuple)."""
+        hit = self._batch_cache.get(tasks)
+        if hit is not None:
+            return hit
+        n = len(tasks)
+        mean = np.empty(n)
+        mu = np.empty(n)
+        sigma = np.empty(n)
+        io_base = np.empty(n)
+        io_rate = np.empty(n)
+        sync = np.empty(n)
+        sensor = np.zeros(n, dtype=bool)
+        for i, t in enumerate(tasks):
+            prof = self.profiles[t]
+            dist = prof.sensor_latency if prof.is_sensor else prof.work
+            mean[i] = dist.mean
+            mu[i] = dist.mu if dist.mean > 0 else 0.0
+            sigma[i] = dist.sigma
+            io_base[i] = prof.io.base
+            io_rate[i] = prof.io.rate
+            sync[i] = prof.sync_per_tile_s
+            sensor[i] = prof.is_sensor
+        params = (mean, mu, sigma, io_base, io_rate, sync, sensor)
+        self._batch_cache[tasks] = params
+        return params
+
+    def bound_batch(
+        self, tasks: Tuple[str, ...], q: float, dops: "np.ndarray"
+    ) -> "np.ndarray":
+        """Vectorized Eq. (1) across many tasks at one quantile.
+
+        ``dops`` aligns with ``tasks`` (ignored for sensor entries,
+        which evaluate their sensor-latency quantile).  This is the
+        frontier search's inner loop: predicting a schedule's E2E miss
+        probability bisects over ``q`` with the chain's task set fixed,
+        so per-call work must be a handful of array ops, not a Python
+        loop over :meth:`bound`.
+        """
+        mean, mu, sigma, io_base, io_rate, sync, sensor = self._batch_params(tasks)
+        z = float(_ndtri(q))
+        with np.errstate(invalid="ignore"):
+            wq = np.where(sigma > 0.0, np.exp(mu + sigma * z), mean)
+        wq = np.where(mean <= 0.0, 0.0, wq)
+        c = np.maximum(np.asarray(dops, dtype=np.float64), 1.0)
+        iq = io_base + np.where(
+            io_rate > 0.0,
+            -math.log(max(1.0 - q, 1e-300)) / np.maximum(io_rate, 1e-300),
+            0.0,
+        )
+        dnn = wq / (c * self.hw.tile_flops) + sync * (c - 1.0) + iq
+        return np.where(sensor, wq, dnn)
+
     def best_dop(self, task: Task, q: float, cap: Optional[int] = None) -> int:
         """Smallest-latency DoP among the (pruned) candidates."""
         cands = task.dop_candidates(cap)
-        return min(cands, key=lambda c: self.bound(task.name, q, c))
+        ladder = self.bound_ladder(task.name, q, cands)
+        best = min(range(len(cands)), key=lambda i: ladder[i])
+        return cands[best]
 
     def min_dop_for_budget(
         self, task: Task, q: float, budget_s: float, cap: Optional[int] = None
     ) -> Optional[int]:
         """Smallest DoP whose q-quantile bound fits in ``budget_s``
         (the FitQuota primitive of Alg. 2); None if infeasible."""
-        for c in task.dop_candidates(cap):
-            if self.bound(task.name, q, c) <= budget_s:
+        cands = task.dop_candidates(cap)
+        for c, l in zip(cands, self.bound_ladder(task.name, q, cands)):
+            if l <= budget_s:
                 return c
         return None
 

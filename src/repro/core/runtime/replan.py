@@ -40,8 +40,9 @@ from ..gha.schedule import Schedule
 from ..latency_model import LatencyModel
 from ..sim.engine import ForecastStats
 from ..workload import Workflow
+from .autotune import FrontierPoint, ModeFrontier, autotune_mode
 from .forecast import ModeForecast, ModeForecaster
-from .reservation import plan_slack
+from .reservation import most_urgent_plan
 
 if TYPE_CHECKING:  # pragma: no cover
     from ..sim.engine import Simulator
@@ -54,12 +55,34 @@ __all__ = [
 
 @dataclasses.dataclass
 class SchedulePortfolio:
-    """Per-mode precomputed GHA schedules, keyed by mode name."""
+    """Per-mode precomputed GHA schedules, keyed by mode name.
+
+    ``frontiers`` keeps each mode's full autotuner search
+    (:class:`~.autotune.ModeFrontier`) and ``selected`` the operating
+    point actually installed — the predictive replanner's blend tables
+    draw alternative per-task plans from them (transition hedging
+    co-optimizes the quantile with the plan, see :func:`blend_schedules`).
+    """
 
     schedules: Dict[str, Schedule]
+    frontiers: Dict[str, ModeFrontier] = dataclasses.field(default_factory=dict)
+    selected: Dict[str, FrontierPoint] = dataclasses.field(default_factory=dict)
 
     def get(self, mode: str) -> Optional[Schedule]:
         return self.schedules.get(mode)
+
+    def blend_alternative(
+        self, mode: str, num_partitions: int
+    ) -> Optional[Schedule]:
+        """A more conservative same-partition-count frontier table for
+        ``mode``, if the autotuner kept one beyond the installed point
+        (None otherwise).  Transition blends hedge per task against it."""
+        frontier = self.frontiers.get(mode)
+        point = self.selected.get(mode)
+        if frontier is None or point is None:
+            return None
+        alt = frontier.blend_source(num_partitions, point)
+        return None if alt is None else alt.schedule
 
     @classmethod
     def compile(
@@ -69,8 +92,12 @@ class SchedulePortfolio:
         modes: Mapping[str, object],
         compiler: Optional[GHACompiler] = None,
         q_ladder: tuple = (0.9, 0.8, 0.7, 0.6, 0.5),
+        target_miss: Optional[float] = None,
+        partition_span: int = 1,
+        budget_fracs: tuple = (0.85, 0.7),
+        dop_prune: Optional[float] = None,
     ) -> "SchedulePortfolio":
-        """One GHA compile per mode.
+        """Per-mode tile-budget autotuning (see :mod:`~.autotune`).
 
         ``modes`` maps mode name to any object exposing
         ``transform_model(model) -> LatencyModel`` (duck-typed so this
@@ -83,27 +110,76 @@ class SchedulePortfolio:
         sensor rates, so a hot-swap at a rate seam installs a table
         that actually matches the new release pattern.
 
-        Heavy modes may be deadline-infeasible at the compiler's
-        conservative quantile: lax budgets then defeat minimum-quota
-        control at runtime.  Per the paper's quantile guideline (§V-B:
-        relax q under pressure — tail-composition headroom covers the
-        difference), each mode steps down ``q_ladder`` until Phases
-        I/III report no deadline violations, keeping the most
-        conservative *feasible* table per mode.
+        With no ``target_miss`` each mode keeps the most conservative
+        deadline-feasible operating point — the walk down ``q_ladder``
+        stops at the first feasible quantile, exactly the legacy
+        q-relaxation behaviour (§V-B: relax q under pressure,
+        tail-composition headroom covers the difference).
+
+        With a ``target_miss``, the full joint search runs: quantiles
+        × partition counts (``compiler.num_partitions ±
+        partition_span``) × tile budgets (``budget_fracs`` of each
+        feasible compile's own peak), and every mode installs the
+        *cheapest* frontier point whose predicted E2E miss probability
+        meets the target.  Because the engine hot-swaps only between
+        equal partition counts, the spatial axis is harmonized across
+        modes first: the common partition count minimizing the
+        portfolio's total reserved tiles (subject to every mode meeting
+        the target) wins.
         """
         compiler = compiler or GHACompiler()
-        out: Dict[str, Schedule] = {}
+        explore = target_miss is not None
+        base_p = compiler.num_partitions
+        frontiers: Dict[str, ModeFrontier] = {}
+        mode_wfs: Dict[str, Workflow] = {}
         for name, mode in modes.items():
             m_model = mode.transform_model(model)
             transform_wf = getattr(mode, "transform_workflow", None)
             m_wf = transform_wf(wf) if transform_wf is not None else wf
-            for q in (compiler.q,) + tuple(x for x in q_ladder if x < compiler.q):
-                sched = dataclasses.replace(compiler, q=q).compile(m_model, m_wf)
-                if (
-                    not sched.meta["phase1_infeasible"]
-                    and not sched.meta["phase3_violations"]
-                ):
-                    break
+            if explore and base_p is not None and base_p > 1:
+                n_dnn = len(m_wf.dnn_tasks)
+                grid = tuple(dict.fromkeys(
+                    max(2, min(p, n_dnn))
+                    for p in range(base_p - partition_span,
+                                   base_p + partition_span + 1)
+                ))
+            else:
+                grid = (base_p,)
+            frontiers[name] = autotune_mode(
+                m_model, m_wf, compiler,
+                q_grid=tuple(q_ladder),
+                partition_grid=grid,
+                budget_fracs=tuple(budget_fracs) if explore else (),
+                stop_at_feasible=not explore,
+                mode_name=name,
+                dop_prune=dop_prune,
+            )
+            mode_wfs[name] = m_wf
+
+        # joint spatial harmonization: hot-swaps require every mode of
+        # a portfolio to share one partition count
+        p_star: Optional[int] = None
+        if explore:
+            common = set.intersection(
+                *(set(f.partition_counts()) for f in frontiers.values())
+            )
+            if common:
+                def p_score(p: int) -> tuple:
+                    sels = [f.select(target_miss, p) for f in frontiers.values()]
+                    short = sum(
+                        (not s.feasible) or s.miss > target_miss for s in sels
+                    )
+                    tiles = sum(s.tiles for s in sels)
+                    anchor = abs(p - base_p) if base_p is not None else 0
+                    return (short, tiles, anchor, p)
+                p_star = min(sorted(common), key=p_score)
+
+        out: Dict[str, Schedule] = {}
+        selected: Dict[str, FrontierPoint] = {}
+        for name, frontier in frontiers.items():
+            point = frontier.select(target_miss, p_star)
+            m_wf = mode_wfs[name]
+            sched = point.schedule
             sched.meta["mode"] = name
             sched.meta["hyper_period_s"] = m_wf.hyper_period_s
             # per-task activation periods under this mode's sensor
@@ -114,22 +190,36 @@ class SchedulePortfolio:
                 t: 1.0 / m_wf.task_rate_hz(t)
                 for t, task in m_wf.tasks.items() if not task.is_sensor
             }
+            sched.meta["autotune"] = frontier.meta(point)
             out[name] = sched
-        return cls(out)
+            selected[name] = point
+        return cls(out, frontiers=frontiers, selected=selected)
 
 
-def blend_schedules(old: Schedule, new: Schedule, wf: Workflow) -> Schedule:
+def blend_schedules(
+    old: Schedule,
+    new: Schedule,
+    wf: Workflow,
+    alt: Optional[Schedule] = None,
+) -> Schedule:
     """Blend two scheduling tables for a low-confidence transition.
 
     Partition capacities stay the *old* table's — the expensive part of
     a swap is the capacity move (preempted jobs, checkpoint migration),
     and a transition we are not sure about must not pay it yet.  Plans
-    blend **per task by slack** (:func:`~.reservation.plan_slack`):
-    each task adopts whichever regime's plan gives it the earlier
-    sub-deadline — the more *urgent* of the two targets — so the
-    runtime treats every task at least as urgently as either regime
-    demands while the context is ambiguous.  DoPs are clamped to the
-    retained partition capacities.
+    blend **per task by slack**
+    (:func:`~.reservation.most_urgent_plan`): each task adopts
+    whichever regime's plan gives it the earlier sub-deadline — the
+    more *urgent* of the targets — so the runtime treats every task at
+    least as urgently as either regime demands while the context is
+    ambiguous.  DoPs are clamped to the retained partition capacities.
+
+    ``alt`` optionally adds a third per-task candidate: a more
+    conservative frontier table of the target mode
+    (:meth:`SchedulePortfolio.blend_alternative`).  A budget-tightened
+    portfolio installs relaxed-quantile plans, but while the context is
+    *ambiguous* the hedge may draw the high-quantile plan instead —
+    the blend co-optimizes the quantile with the plan per task.
 
     The blend carries the old table's ``task_period_s`` meta: the
     sensor-rate regime has not changed yet, so a later full swap still
@@ -137,21 +227,21 @@ def blend_schedules(old: Schedule, new: Schedule, wf: Workflow) -> Schedule:
     """
     if len(old.partitions) != len(new.partitions):
         raise ValueError("blend requires schedules with equal partition counts")
+    if alt is not None and len(alt.partitions) != len(old.partitions):
+        raise ValueError("blend alternative must match the partition count")
     caps = {p.index: p.capacity for p in old.partitions}
     plans = {}
     for task, new_plan in new.plans.items():
+        # candidate order matters: earlier entries win slack ties, so
+        # the old plan (fewest retargets) dominates, then the target
+        # mode's installed plan, then the conservative alternative
+        cands = [new_plan]
         old_plan = old.plans.get(task)
-        if old_plan is None:
-            pick = new_plan
-        else:
-            e2e = wf.deadline_offset(task)
-            # larger downstream slack == earlier sub-deadline; keep the
-            # old plan on ties (fewer retargets)
-            pick = (
-                new_plan
-                if plan_slack(new_plan, e2e) > plan_slack(old_plan, e2e)
-                else old_plan
-            )
+        if old_plan is not None:
+            cands.insert(0, old_plan)
+        if alt is not None and task in alt.plans:
+            cands.append(alt.plans[task])
+        pick = most_urgent_plan(cands, wf.deadline_offset(task))
         dop = max(1, min(pick.dop, caps[pick.partition]))
         plans[task] = dataclasses.replace(pick, dop=dop)
     meta: Dict[str, object] = {
@@ -160,6 +250,22 @@ def blend_schedules(old: Schedule, new: Schedule, wf: Workflow) -> Schedule:
     }
     if old.meta.get("task_period_s") is not None:
         meta["task_period_s"] = old.meta["task_period_s"]
+    # multi-version DoP sets (§IV-D2): during a transition both
+    # regimes' compiled versions are resident (the new table's were
+    # pre-staged), so the blend's runtime ladder is the per-task union
+    # — never the full workflow ladder, which would let FitQuota pick
+    # versions neither table compiled
+    cand_metas = [
+        s.meta.get("task_dop_candidates")
+        for s in ((old, new) + ((alt,) if alt is not None else ()))
+    ]
+    if any(c is not None for c in cand_metas):
+        merged: Dict[str, tuple] = {}
+        for task in plans:
+            sets = [set(c[task]) for c in cand_metas if c and task in c]
+            if sets:
+                merged[task] = tuple(sorted(set.union(*sets)))
+        meta["task_dop_candidates"] = merged
     return Schedule(
         plans=plans,
         partitions=[dataclasses.replace(p) for p in old.partitions],
@@ -217,9 +323,16 @@ class OnlineReplanner:
     def _reactive_swap(self, sim: "Simulator", mode: str, now: float) -> None:
         """Swap to ``mode``'s table the way a reactive runtime can:
         immediately with an oracle (delay 0), else after the detection
-        confirmation window."""
+        confirmation window.  The seam time (``now``) rides in the
+        detect payload: the regime's sensor timers re-anchored at the
+        *seam*, so the deferred swap must re-stagger straddling ERTs
+        onto that grid — anchoring at the detection instant would admit
+        them mid-frame, the exact failure the rate-aware re-stagger
+        exists to prevent."""
         if self.detection_delay_s > 0.0:
-            sim.arm_forecast(now + self.detection_delay_s, ("detect", mode))
+            sim.arm_forecast(
+                now + self.detection_delay_s, ("detect", mode, now)
+            )
         else:
             self._swap_to(sim, self.portfolio.get(mode))
 
@@ -228,17 +341,21 @@ class OnlineReplanner:
 
     def on_forecast(self, sim: "Simulator", payload: object, now: float) -> None:
         """Deferred detection: the confirmation window armed at the
-        seam has elapsed — swap to the (by now confirmed) mode.  If the
-        context shifted again meanwhile, that seam armed its own
-        detection event which will re-correct; briefly installing the
-        stale detection's table is exactly what a confirmation-window
+        seam has elapsed — swap to the (by now confirmed) mode,
+        anchored at the seam recorded in the payload.  If the context
+        shifted again meanwhile, that seam armed its own detection
+        event which will re-correct; briefly installing the stale
+        detection's table is exactly what a confirmation-window
         runtime does."""
         if (
             isinstance(payload, tuple)
-            and len(payload) == 2
+            and len(payload) == 3
             and payload[0] == "detect"
         ):
-            self._swap_to(sim, self.portfolio.get(payload[1]))
+            self._swap_to(
+                sim, self.portfolio.get(payload[1]),
+                regime_anchor_s=payload[2],
+            )
 
 
 @dataclasses.dataclass
@@ -293,10 +410,11 @@ class PredictiveReplanner(OnlineReplanner):
     #: table is activated as soon as no partition would have to preempt
     #: a running job (capacity shrinks wait for stragglers of the old
     #: mode to drain), forced at the latest this long past the seam.
-    #: 0 activates at the seam unconditionally.
+    #: 0 activates at the seam unconditionally.  While waiting, the
+    #: engine's drain watch re-checks at every partition ``finish``
+    #: event — allocation only ever drops when a job finishes, so the
+    #: swap lands at the exact drain instant instead of on a poll grid.
     max_drain_s: float = 0.08
-    #: drain-poll interval while waiting for stragglers
-    drain_poll_s: float = 0.005
     forecast_stats: ForecastStats = dataclasses.field(
         default_factory=ForecastStats
     )
@@ -323,7 +441,9 @@ class PredictiveReplanner(OnlineReplanner):
             )
         staged = self._staged
         self._epoch += 1          # stale stage/revert/activate events die here
-        self._pending_act = None
+        if self._pending_act is not None:
+            self._pending_act = None
+            sim.clear_drain_watch()
         stats = self.forecast_stats
         if staged is None:
             self._reactive_swap(sim, mode, now)
@@ -360,9 +480,12 @@ class PredictiveReplanner(OnlineReplanner):
         # follow-up event, so a stale detect from an earlier missed
         # seam would clobber the correct table and nothing would
         # re-correct it.  Epoch-tag detects so seams kill stale ones.
+        # The seam time rides along as the regime anchor (see the base
+        # class's _reactive_swap).
         if self.detection_delay_s > 0.0:
             sim.arm_forecast(
-                now + self.detection_delay_s, ("detect", self._epoch, mode)
+                now + self.detection_delay_s,
+                ("detect", self._epoch, mode, now),
             )
         else:
             self._swap_to(sim, self.portfolio.get(mode))
@@ -372,8 +495,11 @@ class PredictiveReplanner(OnlineReplanner):
             return
         kind = payload[0]
         if kind == "detect":           # deferred miss/fallback detection
-            if len(payload) == 3 and payload[1] == self._epoch:
-                self._swap_to(sim, self.portfolio.get(payload[2]))
+            if len(payload) == 4 and payload[1] == self._epoch:
+                self._swap_to(
+                    sim, self.portfolio.get(payload[2]),
+                    regime_anchor_s=payload[3],
+                )
             return
         epoch = payload[1]
         if epoch != self._epoch:
@@ -382,10 +508,12 @@ class PredictiveReplanner(OnlineReplanner):
             self._stage(sim, payload[2], now)
         elif kind == "revert":
             self._revert(sim, now)
-        elif kind == "activate":
+        elif kind in ("activate", "drain"):
+            # "drain": the engine's drain watch saw a partition free
+            # allocation (a finish event) while an activation was
+            # deferred; "activate": the max_drain_s force deadline
             if self._pending_act is not None:
                 mode, seam_s, deadline_s = self._pending_act
-                self._pending_act = None
                 self._activate(sim, mode, now, seam_s, deadline_s)
 
     # -- internals -------------------------------------------------------
@@ -414,9 +542,19 @@ class PredictiveReplanner(OnlineReplanner):
     ) -> None:
         """Drain-aware activation of ``mode``'s table: swap as soon as
         no partition would preempt (every capacity shrink fits under
-        the current allocation), forced at ``deadline_s``."""
+        the current allocation), forced at ``deadline_s``.
+
+        While stragglers hold the over-capacity tiles the replanner
+        arms the engine's *drain watch*: allocation can only drop at a
+        job ``finish``, so the watch re-fires this check at exactly
+        those instants and the swap lands at the true drain point.  A
+        single ``activate`` forecast event at ``deadline_s`` bounds the
+        wait (stragglers of a dying mode must not block the new table
+        forever)."""
         table = self.portfolio.get(mode)
         if table is None or table is sim.schedule:
+            self._pending_act = None
+            sim.clear_drain_watch()
             return
         if now + 1e-12 < deadline_s:
             over = any(
@@ -424,12 +562,15 @@ class PredictiveReplanner(OnlineReplanner):
                 for p in sim.parts
             )
             if over:
+                if self._pending_act is None:
+                    # first deferral: arm the force deadline once; the
+                    # per-finish re-checks ride the drain watch
+                    sim.arm_forecast(deadline_s, ("activate", self._epoch))
                 self._pending_act = (mode, seam_s, deadline_s)
-                sim.arm_forecast(
-                    min(now + self.drain_poll_s, deadline_s),
-                    ("activate", self._epoch),
-                )
+                sim.arm_drain_watch(("drain", self._epoch))
                 return
+        self._pending_act = None
+        sim.clear_drain_watch()
         self._swap_to(sim, table, regime_anchor_s=seam_s)
 
     def _stage(self, sim: "Simulator", f: ModeForecast, now: float) -> None:
@@ -450,10 +591,18 @@ class PredictiveReplanner(OnlineReplanner):
         else:
             # low-confidence hedge: install the blended table (plan
             # urgency only, no capacity move); its few adopted-new-plan
-            # weight deltas background-copy over the same window
+            # weight deltas background-copy over the same window.  The
+            # hedge draws a third per-task candidate from the target
+            # mode's frontier (the most conservative feasible table at
+            # this partition count) so a budget-tightened portfolio
+            # still hedges with the high-quantile plan while the
+            # context is ambiguous.
             stats.n_blends += 1
+            alt = self.portfolio.blend_alternative(
+                f.target_mode, len(sim.schedule.partitions)
+            )
             stats.prestage_stall_s += self._swap_to(
-                sim, blend_schedules(sim.schedule, new, sim.wf),
+                sim, blend_schedules(sim.schedule, new, sim.wf, alt=alt),
                 prestage_window_s=window,
             )
             blend = True

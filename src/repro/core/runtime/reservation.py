@@ -15,17 +15,33 @@ from typing import Sequence
 
 from ..sim.engine import Job
 
-__all__ = ["fit_quota", "plan_slack"]
+__all__ = ["fit_quota", "plan_slack", "most_urgent_plan"]
 
 
 def plan_slack(plan, e2e_offset_s: float) -> float:
     """Downstream slack a scheduling-table entry leaves a task: the gap
     between its sub-deadline and the tightest E2E deadline offset
-    through it (``Workflow.deadline_offset``).  Smaller slack = the
-    plan's regime is more demanding for this task.  Schedule blending
-    (``repro.core.runtime.replan.blend_schedules``) keys its per-task
-    old-vs-new choice on this."""
+    through it (``Workflow.deadline_offset``).  A more demanding regime
+    schedules the task to an *earlier* sub-deadline and therefore
+    leaves a **larger** slack value — which is why
+    :func:`most_urgent_plan` (and schedule blending on top of it) picks
+    the maximum."""
     return e2e_offset_s - plan.subdeadline_s
+
+
+def most_urgent_plan(plans: Sequence, e2e_offset_s: float):
+    """The candidate plan with the largest downstream slack — i.e. the
+    earliest sub-deadline, the most *urgent* target among the regimes
+    on offer.  Earlier candidates win ties, so callers order the list
+    by retarget cost (current plan first).  Schedule blending picks
+    each task's transition-hedge plan with this."""
+    best = plans[0]
+    best_slack = plan_slack(best, e2e_offset_s)
+    for p in plans[1:]:
+        s = plan_slack(p, e2e_offset_s)
+        if s > best_slack:
+            best, best_slack = p, s
+    return best
 
 
 def fit_quota(

@@ -50,20 +50,34 @@ class AdsTilePolicy(Policy):
         self._down: Dict[str, float] = {}
         self._cands: Dict[str, tuple] = {}
         self._cmax: Dict[str, int] = {}
+        self._cands_src: object = ()
 
     # ------------------------------------------------------------------
     def setup(self, sim: Simulator) -> None:
         # per-task DoP candidate cache (hot: FitQuota walks the ladder
-        # at every scheduling point).  Workflow-derived, so it survives
-        # re-setups after schedule hot-swaps — predictive replanning
-        # re-runs setup() at every stage/commit/revert, and only the
-        # schedule-derived state below actually changes.
-        if not self._cands:
-            self._cands = {
-                name: t.dop_candidates()
-                for name, t in sim.wf.tasks.items() if not t.is_sensor
-            }
+        # at every scheduling point).  Normally workflow-derived, so it
+        # survives re-setups after schedule hot-swaps — predictive
+        # replanning re-runs setup() at every stage/commit/revert, and
+        # only the schedule-derived state below actually changes.  A
+        # table compiled by the tile-budget autotuner with DoP pruning
+        # carries its *multi-version candidate set* instead
+        # (meta["task_dop_candidates"], §IV-D2: the runtime can only
+        # pick among the versions actually compiled), so the ladder
+        # follows the installed table across swaps.
+        src = sim.schedule.meta.get("task_dop_candidates")
+        if src is not self._cands_src or not self._cands:
+            if src is not None:
+                self._cands = {
+                    name: tuple(src.get(name, t.dop_candidates()))
+                    for name, t in sim.wf.tasks.items() if not t.is_sensor
+                }
+            else:
+                self._cands = {
+                    name: t.dop_candidates()
+                    for name, t in sim.wf.tasks.items() if not t.is_sensor
+                }
             self._cmax = {name: max(c) for name, c in self._cands.items()}
+            self._cands_src = src
         # downstream budget per task: tightest over chains (Getddl's
         # relative-timing data, precomputed offline)
         sched = sim.schedule

@@ -291,6 +291,24 @@ class SimReport:
     n_mode_switches: int = 0
     # predictive replanning only: pre-stage accounting
     forecast: Optional[ForecastStats] = None
+    #: tiles the run actually reserved: the maximum ``peak_tiles`` over
+    #: every scheduling table active during the run (one table for a
+    #: pinned run; the max across hot-swapped per-mode tables
+    #: otherwise).  ``total_tiles`` is what the hardware *has*; the gap
+    #: is the tile-budget autotuner's headline (figS_budget).
+    tiles_used: int = 0
+    #: time-weighted mean of the active table's ``peak_tiles`` — what
+    #: the scheduler held *on average* over the run.  Per-mode tables
+    #: reserve different tile counts, so a drive spending most of its
+    #: time in light modes averages well below its peak reservation;
+    #: a work-conserving single-bin table holds its full reservation
+    #: for the whole drive by construction.
+    tiles_reserved_mean: float = 0.0
+    #: the initial table's autotuner metadata (``meta["autotune"]``):
+    #: selected quantile/budget/predicted miss + the mode's Pareto
+    #: frontier of (tiles, miss, q, partitions).  Empty for schedules
+    #: compiled outside the autotuner.
+    frontier_meta: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     @property
     def violation_rate(self) -> float:
@@ -359,6 +377,18 @@ class Simulator:
         # weight/feature state already staged in the background by a
         # predictive pre-stage: task -> (partition, dop) resident plans
         self._staged_plans: Dict[str, Tuple[int, int]] = {}
+        # tile-reservation accounting + autotuner metadata for the report
+        self._tiles_used: int = schedule.peak_tiles
+        self._reserved_ts: float = 0.0   # peak_tiles-seconds of past tables
+        self._reserved_t0: float = 0.0   # when the active table was installed
+        self._frontier_meta: Dict[str, object] = dict(
+            schedule.meta.get("autotune") or {}
+        )
+        # drain watch: an opaque payload re-delivered to the policy's
+        # on_forecast at every job finish while armed (the predictive
+        # replanner's drain-aware activation rides this — allocation
+        # only drops at finishes, so polling between them is pointless)
+        self._drain_watch: Optional[object] = None
         # scenario state: active mode + per-mode accounting buckets
         self._mode_now: Optional[str] = None
         self._mode_busy: Dict[str, float] = {}
@@ -602,6 +632,7 @@ class Simulator:
             job.gen += 1
         # apply new dops now (tiles occupied during the stall);
         # dop == 0 preempts back to the ready queue
+        shrunk = False
         for jid, d in changed.items():
             job = self.jobs[jid]
             if d == 0:
@@ -609,10 +640,14 @@ class Simulator:
                 job.dop = 0
                 job.state = JobState.READY
                 self._ready_sets[partition].add(job)
+                shrunk = True
             else:
+                shrunk = shrunk or d < part.running[jid]
                 part.alloc += d - part.running[jid]
                 part.running[jid] = d
                 job.dop = d
+        if shrunk:
+            self._notify_drain()
         self._begin_stall(part, moved, stall)
         for jid, d in starts.items():
             self.start_job(self.jobs[jid], d)
@@ -755,6 +790,11 @@ class Simulator:
             raise ValueError(
                 "hot-swap requires a schedule with the same partition count"
             )
+        self._tiles_used = max(self._tiles_used, new.peak_tiles)
+        self._reserved_ts += self.schedule.peak_tiles * max(
+            0.0, self.now - self._reserved_t0
+        )
+        self._reserved_t0 = self.now
         # weight/feature staging volume per target partition (plan
         # deltas); state already background-staged for exactly this
         # (partition, dop) is resident and moves nothing
@@ -861,6 +901,7 @@ class Simulator:
         part.alloc -= part.running.pop(job.jid)
         job.state = JobState.READY
         self._ready_sets[job.partition].add(job)
+        self._notify_drain()
 
     def terminate(self, job: Job, reason: str = "deadline") -> None:
         """Drop a job (Cyc. budget overrun / E2E-deadline dequeue)."""
@@ -869,6 +910,7 @@ class Simulator:
             self._touch(part)
             self._advance_job(job)
             part.alloc -= part.running.pop(job.jid)
+            self._notify_drain()
         elif job.state == JobState.READY:
             self._ready_sets[job.partition].discard(job)
         job.state = JobState.DROPPED
@@ -893,6 +935,27 @@ class Simulator:
         the predictive replanner to wake up ahead of a predicted seam).
         ``payload`` is opaque to the engine."""
         self._push(t, "forecast", (payload,))
+
+    def arm_drain_watch(self, payload: object) -> None:
+        """Arm (or re-arm) the drain watch: until cleared, every event
+        that drops a partition's allocation — a job finish, a resize
+        that shrinks or preempts, a preemption, a drop — re-delivers
+        ``payload`` to ``policy.on_forecast`` at that instant, so a
+        drain-deferred schedule activation lands at the exact drain
+        point instead of on a poll grid.  Finishes deliver inline
+        (before the policy can refill the freed tiles); drops from
+        within a policy pass are delivered as a same-timestamp event so
+        the pass is never re-entered mid-flight."""
+        self._drain_watch = payload
+
+    def clear_drain_watch(self) -> None:
+        self._drain_watch = None
+
+    def _notify_drain(self) -> None:
+        """Queue a drain-watch delivery at the current instant (fired
+        after the in-flight event completes, before time advances)."""
+        if self._drain_watch is not None:
+            self._push(self.now, "forecast", (self._drain_watch,))
 
     # ------------------------------------------------------------------
     # dependency propagation
@@ -1018,6 +1081,11 @@ class Simulator:
                     continue
                 self._advance_job(job)
                 self._finish_job(job)
+                if self._drain_watch is not None:
+                    # drain-aware activation: allocation just dropped —
+                    # let the replanner re-check before the policy
+                    # refills the freed tiles under the old table
+                    self.policy.on_forecast(self, self._drain_watch, self.now)
                 self.policy.on_point(self, job.partition, self.now, "finish", job)
             elif kind == "chunk":
                 jid, gen = payload
@@ -1201,4 +1269,11 @@ class Simulator:
             mode_stats=mode_stats,
             n_mode_switches=self.n_mode_switches,
             forecast=fstats,
+            tiles_used=self._tiles_used,
+            tiles_reserved_mean=(
+                self._reserved_ts
+                + self.schedule.peak_tiles
+                * max(0.0, self.cfg.duration_s - self._reserved_t0)
+            ) / self.cfg.duration_s,
+            frontier_meta=self._frontier_meta,
         )

@@ -38,10 +38,10 @@ lognormal sensor latency).  Consequences, which tests pin:
   comparisons are exactly paired at the job level;
 * truncating or extending the horizon never shifts the draws of the
   jobs both runs share;
-* the draws are *distribution-equivalent* to the legacy scalar path
-  (same inverse CDFs, uniform inputs) but not bit-identical to it —
-  :func:`scalar_reference_trace` keeps the legacy ``RandomState``
-  sequence for equivalence tests and benchmarks.
+* the draws are *distribution-equivalent* to the retired scalar
+  ``RandomState`` path (same inverse CDFs, uniform inputs): the KS
+  tests in ``tests/test_trace.py`` pin each stream's distribution
+  against the analytic CDFs directly.
 """
 from __future__ import annotations
 
@@ -67,7 +67,6 @@ __all__ = [
     "Trace",
     "build_skeleton",
     "sample_trace",
-    "scalar_reference_trace",
     "clear_skeleton_cache",
 ]
 
@@ -613,51 +612,6 @@ def sample_trace(
         sensor_lat[s] = _lognormal_from_uniforms(
             0.001 + 0.998 * u, par.mean[s], par.mu[s], par.sigma[s]
         )
-    return Trace(
-        skeleton_key=skel.key, seed=seed,
-        work=work, io=io, sensor_lat=sensor_lat,
-    )
-
-
-def scalar_reference_trace(
-    skel: TraceSkeleton,
-    model: LatencyModel,
-    scenario,
-    seed: int,
-) -> Trace:
-    """The legacy per-job scalar sampling path (pre-batching engine),
-    reproduced draw-for-draw: one sequential ``RandomState`` stream in
-    build order.  Kept for distribution-equivalence tests and as the
-    baseline side of ``benchmarks/perf_bench.py`` — not used by the
-    engine."""
-    rng = np.random.RandomState(seed)
-    n = skel.n
-    work = np.zeros(n, dtype=np.float64)
-    io = np.zeros(n, dtype=np.float64)
-    sensor_lat = np.zeros(n, dtype=np.float64)
-    profs = _mode_profiles(model, scenario)
-    for i in range(n):
-        task = skel.tasks[i]
-        prof = (
-            model.profiles[task] if profs is None
-            else profs[skel.mode[i]][task]
-        )
-        if skel.is_sensor[i]:
-            sensor_lat[i] = float(
-                prof.sensor_latency.quantile(
-                    min(rng.uniform(0.001, 0.999), 0.999)
-                )
-            )
-        else:
-            w = float(
-                rng.lognormal(prof.work.mu, max(prof.work.sigma, 1e-12))
-            ) if prof.work.mean > 0 else 0.0
-            io_v = prof.io.base + (
-                float(rng.exponential(1.0 / prof.io.rate))
-                if prof.io.rate > 0 else 0.0
-            )
-            work[i] = w * skel.burst[i]
-            io[i] = io_v
     return Trace(
         skeleton_key=skel.key, seed=seed,
         work=work, io=io, sensor_lat=sensor_lat,

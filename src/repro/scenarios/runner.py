@@ -75,6 +75,12 @@ class ScenarioSpec(ExperimentSpec):
     #: route-informed case); False falls back to pure Markov+dwell
     #: estimation, which can be early, late, or plain wrong
     route_forecast: bool = True
+    #: predicted E2E miss-probability target for the tile-budget
+    #: autotuner: each mode installs the cheapest frontier point
+    #: meeting it (see ``docs/autotuner.md``).  None keeps the most
+    #: conservative feasible table per mode (the legacy q-ladder
+    #: choice).  Ignored when a precompiled ``portfolio`` is supplied.
+    target_miss: Optional[float] = None
     duration_s: Optional[float] = None          # None = the scenario's length
     #: precompiled per-mode schedules; None compiles one per run.
     #: sweep() fills this so N scenarios share one portfolio per policy
@@ -97,14 +103,20 @@ class ScenarioSpec(ExperimentSpec):
 
 
 def compile_portfolio(
-    spec: ScenarioSpec, modes: Optional[Sequence[str]] = None
+    spec: ScenarioSpec, modes: Optional[Sequence[str]] = None, **autotune_kw
 ) -> SchedulePortfolio:
     """Compile the per-mode schedule portfolio for ``spec``'s workload
-    (``modes`` defaults to the scenario's own mode set)."""
+    (``modes`` defaults to the scenario's own mode set).
+
+    ``spec.target_miss`` (or any explicit ``autotune_kw``) engages the
+    tile-budget autotuner's joint search; the default compiles each
+    mode's most conservative feasible table.
+    """
     wf, _hw, model, compiler = build_stack(spec)
     wanted = tuple(modes) if modes is not None else spec.scenario.modes()
+    autotune_kw.setdefault("target_miss", spec.target_miss)
     return SchedulePortfolio.compile(
-        model, wf, {m: get_mode(m) for m in wanted}, compiler,
+        model, wf, {m: get_mode(m) for m in wanted}, compiler, **autotune_kw,
     )
 
 
@@ -148,6 +160,7 @@ def run_scenario(spec: ScenarioSpec, trace: Optional[Trace] = None) -> SimReport
         wanted = scen.modes() if spec.replan else (initial_mode,)
         portfolio = SchedulePortfolio.compile(
             model, wf, {m: get_mode(m) for m in wanted}, compiler,
+            target_miss=spec.target_miss,
         )
     sched = portfolio.schedules[initial_mode]
 
@@ -242,6 +255,9 @@ def summarize(spec: ScenarioSpec, report: SimReport) -> Dict[str, object]:
         "realloc_frac": report.realloc_frac,
         "n_realloc": report.n_realloc,
         "n_mode_switches": report.n_mode_switches,
+        "tiles_used": report.tiles_used,
+        "tiles_reserved_mean": report.tiles_reserved_mean,
+        "target_miss": spec.target_miss,
         "per_mode": {
             m: {
                 "span_s": s.span_s,
@@ -347,6 +363,7 @@ def aggregate_sweep(
             "violation_rate": float(np.mean([r["violation_rate"] for r in rs])),
             "task_miss_rate": float(np.mean([r["task_miss_rate"] for r in rs])),
             "realloc_frac": float(np.mean([r["realloc_frac"] for r in rs])),
+            "tiles_used": int(max(int(r.get("tiles_used", 0)) for r in rs)),
             "per_mode": {
                 m: {k: float(np.mean(v)) if v else float("nan")
                     for k, v in b.items()}

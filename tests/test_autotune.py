@@ -1,0 +1,297 @@
+"""Tile-budget autotuner tests: frontier determinism, Pareto
+monotonicity, exact equivalence with the legacy q-relaxation ladder at
+a pinned partition count, targeted selection semantics, and the
+paired-trace acceptance that a frontier compile never reserves more
+tiles than the ladder compile at the same service level."""
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.experiment import build_stack, make_policy
+from repro.core.runtime import (
+    SchedulePortfolio,
+    autotune_mode,
+    blend_schedules,
+    most_urgent_plan,
+    predict_miss,
+)
+from repro.core.runtime.autotune import clear_frontier_cache
+from repro.core.sim import SimConfig, Simulator
+from repro.scenarios import ScenarioSpec, get_mode, get_scenario
+from repro.scenarios.runner import build_trace, compile_portfolio, run_scenario
+
+Q_LADDER = (0.9, 0.8, 0.7, 0.6, 0.5)
+
+
+def _stack(policy="ads_tile", **kw):
+    spec = ScenarioSpec(
+        scenario=get_scenario("rate_churn"), policy=policy, seed=1, **kw
+    )
+    return build_stack(spec)
+
+
+def _mode_stack(mode_name, policy="ads_tile"):
+    """(model, workflow) transformed for one driving mode."""
+    wf, _hw, model, compiler = _stack(policy)
+    mode = get_mode(mode_name)
+    m_model = mode.transform_model(model)
+    transform_wf = getattr(mode, "transform_workflow", None)
+    m_wf = transform_wf(wf) if transform_wf is not None else wf
+    return m_model, m_wf, compiler
+
+
+def _ladder_reference(model, wf, modes, compiler, q_ladder=Q_LADDER):
+    """The legacy per-mode q-relaxation ladder, reproduced verbatim:
+    walk q down from the compiler's, keep the first feasible compile,
+    fall back to the last (lowest-q) one."""
+    out = {}
+    for name, mode in modes.items():
+        m_model = mode.transform_model(model)
+        transform_wf = getattr(mode, "transform_workflow", None)
+        m_wf = transform_wf(wf) if transform_wf is not None else wf
+        for q in (compiler.q,) + tuple(x for x in q_ladder if x < compiler.q):
+            sched = dataclasses.replace(compiler, q=q).compile(m_model, m_wf)
+            if (
+                not sched.meta["phase1_infeasible"]
+                and not sched.meta["phase3_violations"]
+            ):
+                break
+        out[name] = sched
+    return out
+
+
+# ---------------------------------------------------------------------------
+# frontier structure
+# ---------------------------------------------------------------------------
+def test_frontier_deterministic_across_fresh_stacks():
+    """Equal-valued inputs produce identical frontiers, with and
+    without the memo (the search has no hidden state)."""
+    m1, w1, c1 = _mode_stack("urban")
+    fr1 = autotune_mode(m1, w1, c1, q_grid=Q_LADDER, mode_name="urban")
+    clear_frontier_cache()
+    m2, w2, c2 = _mode_stack("urban")
+    fr2 = autotune_mode(m2, w2, c2, q_grid=Q_LADDER, mode_name="urban")
+    assert [p.key() for p in fr1.points] == [p.key() for p in fr2.points]
+    assert [p.feasible for p in fr1.points] == [p.feasible for p in fr2.points]
+    # and the memo serves the identical object for an equal-valued stack
+    m3, w3, c3 = _mode_stack("urban")
+    assert autotune_mode(m3, w3, c3, q_grid=Q_LADDER, mode_name="urban") is fr2
+
+
+def test_pareto_frontier_is_monotone():
+    """More tiles never increases the predicted miss probability along
+    the frontier, and every feasible point is dominated by (or on) it."""
+    model, wf, compiler = _mode_stack("urban")
+    fr = autotune_mode(
+        model,
+        wf,
+        compiler,
+        q_grid=Q_LADDER,
+        partition_grid=(3, 4, 5),
+        budget_fracs=(0.85, 0.7),
+        mode_name="urban",
+    )
+    pareto = fr.pareto()
+    assert len(pareto) >= 2
+    tiles = [p.tiles for p in pareto]
+    misses = [p.miss for p in pareto]
+    assert tiles == sorted(tiles)
+    assert all(a > b for a, b in zip(misses, misses[1:]))
+    for p in fr.feasible_points():
+        assert any(
+            f.tiles <= p.tiles and f.miss <= p.miss for f in pareto
+        ), p.key()
+
+
+def test_predict_miss_monotone_in_dop():
+    """Doubling every DoP can only lower the analytic miss bound."""
+    model, wf, compiler = _mode_stack("urban")
+    sched = compiler.compile(model, wf)
+    slack = predict_miss(model, wf, sched)
+    shrunk = dataclasses.replace(
+        sched,
+        plans={
+            t: dataclasses.replace(p, dop=max(1, p.dop // 2))
+            for t, p in sched.plans.items()
+        },
+    )
+    assert predict_miss(model, wf, shrunk) >= slack
+
+
+# ---------------------------------------------------------------------------
+# equivalence with the legacy q-relaxation ladder
+# ---------------------------------------------------------------------------
+def test_pinned_partition_frontier_reproduces_ladder_quantiles():
+    """With the partition count pinned and no miss target, every mode
+    of the portfolio must keep exactly the quantile the legacy ladder
+    chose (the acceptance criterion for replacing it)."""
+    scen = get_scenario("rate_churn")
+    wf, _hw, model, compiler = _stack()
+    modes = {m: get_mode(m) for m in scen.modes()}
+    reference = _ladder_reference(model, wf, modes, compiler)
+    pf = SchedulePortfolio.compile(model, wf, modes, compiler)
+    for name, ref in reference.items():
+        assert pf.schedules[name].q == ref.q, name
+        assert pf.schedules[name].peak_tiles == ref.peak_tiles, name
+        assert pf.selected[name].num_partitions == len(ref.partitions), name
+
+
+def test_frontier_never_beats_ladder_tiles_at_equal_q():
+    """For every quantile the ladder could have chosen, the frontier's
+    cheapest feasible same-q point reserves at most the ladder
+    compile's tiles (it includes that compile)."""
+    model, wf, compiler = _mode_stack("urban")
+    fr = autotune_mode(
+        model,
+        wf,
+        compiler,
+        q_grid=Q_LADDER,
+        budget_fracs=(0.85, 0.7),
+        mode_name="urban",
+    )
+    by_q = {}
+    for p in fr.feasible_points():
+        by_q.setdefault(p.q, []).append(p.tiles)
+    assert by_q
+    for q, tiles in by_q.items():
+        ladder = dataclasses.replace(compiler, q=q).compile(model, wf)
+        assert min(tiles) <= ladder.peak_tiles, q
+
+
+def test_paired_trace_frontier_compile_uses_no_more_tiles():
+    """Acceptance: on one shared trace, the targeted frontier portfolio
+    reserves no more tiles than the ladder portfolio while meeting its
+    own predicted-miss target."""
+    scen = get_scenario("rate_churn")
+    spec = ScenarioSpec(scenario=scen, policy="ads_tile", seed=3)
+    wf, _hw, model, compiler = build_stack(spec)
+    modes = {m: get_mode(m) for m in scen.modes()}
+    ladder_pf = SchedulePortfolio.compile(model, wf, modes, compiler)
+    target = max(p.miss for p in ladder_pf.selected.values())
+    frontier_pf = SchedulePortfolio.compile(
+        model, wf, modes, compiler, target_miss=target, partition_span=0
+    )
+    for name, point in frontier_pf.selected.items():
+        assert point.tiles <= ladder_pf.selected[name].tiles, name
+        assert point.miss <= target + 1e-12, name
+    trace = build_trace(spec)
+    r_ladder = run_scenario(
+        dataclasses.replace(spec, portfolio=ladder_pf), trace=trace
+    )
+    r_frontier = run_scenario(
+        dataclasses.replace(spec, portfolio=frontier_pf), trace=trace
+    )
+    assert r_frontier.tiles_used <= r_ladder.tiles_used
+    assert 0 < r_frontier.tiles_reserved_mean <= r_frontier.tiles_used
+
+
+# ---------------------------------------------------------------------------
+# targeted selection + runtime plumbing
+# ---------------------------------------------------------------------------
+def test_targeted_selection_picks_cheapest_meeting_target():
+    model, wf, compiler = _mode_stack("urban")
+    fr = autotune_mode(
+        model,
+        wf,
+        compiler,
+        q_grid=Q_LADDER,
+        budget_fracs=(0.85, 0.7),
+        mode_name="urban",
+    )
+    pareto = fr.pareto()
+    mid = pareto[len(pareto) // 2]
+    pick = fr.select(target_miss=mid.miss)
+    assert pick.feasible and pick.miss <= mid.miss
+    assert pick.tiles == min(
+        p.tiles for p in fr.feasible_points() if p.miss <= mid.miss
+    )
+    # an unreachable target degrades to the lowest-miss point, never to
+    # a cheap table that ignores the service level
+    strict = fr.select(target_miss=0.0)
+    assert strict.miss == min(p.miss for p in fr.feasible_points())
+
+
+def test_portfolio_harmonizes_partition_counts():
+    """A targeted compile explores partition counts but every mode must
+    land on one shared count — the engine only hot-swaps between
+    tables with equal partition counts."""
+    scen = get_scenario("rate_churn")
+    wf, _hw, model, compiler = _stack()
+    modes = {m: get_mode(m) for m in scen.modes()}
+    pf = SchedulePortfolio.compile(
+        model, wf, modes, compiler, target_miss=0.4, partition_span=1
+    )
+    counts = {len(s.partitions) for s in pf.schedules.values()}
+    assert len(counts) == 1
+    r = run_scenario(
+        ScenarioSpec(scenario=scen, policy="ads_tile", seed=2, portfolio=pf)
+    )
+    assert r.tiles_used == max(p.tiles for p in pf.selected.values())
+    assert r.frontier_meta["tiles"] == pf.selected[scen.segments[0].mode].tiles
+
+
+def test_blend_draws_conservative_plan_from_frontier():
+    """With a budget-tightened portfolio, the transition hedge may pick
+    a task's plan from the mode's most conservative same-count frontier
+    point, and every chosen plan is the most urgent candidate."""
+    scen = get_scenario("rate_churn")
+    wf, _hw, model, compiler = _stack()
+    modes = {m: get_mode(m) for m in scen.modes()}
+    pf = SchedulePortfolio.compile(
+        model, wf, modes, compiler, target_miss=0.45, partition_span=0
+    )
+    old = pf.schedules["urban"]
+    new = pf.schedules["rush_hour"]
+    alt = pf.blend_alternative("rush_hour", len(old.partitions))
+    assert alt is not None and alt.q > new.q
+    blend = blend_schedules(old, new, wf, alt=alt)
+    caps = {p.index: p.capacity for p in old.partitions}
+    for task, plan in blend.plans.items():
+        cands = [old.plans[task], new.plans[task], alt.plans[task]]
+        want = most_urgent_plan(cands, wf.deadline_offset(task))
+        assert plan.partition == want.partition, task
+        assert plan.dop == max(1, min(want.dop, caps[want.partition])), task
+
+
+def test_dop_prune_meta_reaches_the_scheduler():
+    """An autotuned table compiled with DoP pruning restricts the
+    runtime's candidate ladder to the compiled multi-version set."""
+    scen = get_scenario("rate_churn")
+    spec = ScenarioSpec(scenario=scen, policy="ads_tile", seed=1)
+    wf, _hw, model, compiler = build_stack(spec)
+    modes = {m: get_mode(m) for m in scen.modes()}
+    pf = SchedulePortfolio.compile(model, wf, modes, compiler, dop_prune=0.05)
+    sched = pf.schedules[scen.segments[0].mode]
+    meta = sched.meta["task_dop_candidates"]
+    assert meta and all(len(v) >= 1 for v in meta.values())
+    policy = make_policy("ads_tile")
+    sim = Simulator(
+        wf, model, sched, policy, SimConfig(duration_s=0.4, seed=1)
+    )
+    policy.setup(sim)
+    for task, cands in meta.items():
+        assert policy._cands[task] == tuple(cands), task
+        full = wf.tasks[task].dop_candidates()
+        assert set(cands) <= set(full), task
+    # a table without the meta restores the workflow-derived ladder
+    plain = compiler.compile(model, wf)
+    sim.schedule = plain
+    policy.setup(sim)
+    for task in meta:
+        assert policy._cands[task] == wf.tasks[task].dop_candidates(), task
+
+
+def test_target_miss_threads_through_scenario_spec():
+    scen = get_scenario("rate_churn")
+    spec = ScenarioSpec(
+        scenario=scen, policy="ads_tile", seed=1, target_miss=0.45
+    )
+    pf = compile_portfolio(spec)
+    pf_cons = compile_portfolio(dataclasses.replace(spec, target_miss=None))
+    assert max(p.tiles for p in pf.selected.values()) < max(
+        p.tiles for p in pf_cons.selected.values()
+    )
+    r = run_scenario(spec)
+    assert r.tiles_used <= max(p.tiles for p in pf.selected.values())
+    assert np.isfinite(r.tiles_reserved_mean)

@@ -119,3 +119,35 @@ def test_hardware_models():
     assert 1e-4 < lat < 1e-3
     pod = tpu_pod(256)
     assert pod.num_tiles == 256
+
+
+def test_bound_ladder_and_batch_match_scalar_bounds():
+    """The ladder and vectorized-batch evaluations of Eq. (1) must stay
+    in lockstep with the scalar `bound()` path — including the edge
+    cases (sensor tasks, zero-sigma work, rate<=0 I/O).  The autotuner
+    ranks frontiers with the batch path while the compiler budgets with
+    the scalar one; any drift silently desynchronizes them."""
+    wf = make_ads_benchmark()
+    model = LatencyModel.from_workflow(wf, simba_chip(400))
+    # hand-built edge-case profiles alongside the benchmark's
+    model.profiles["zero_sigma"] = TaskLatencyProfile(
+        name="zero_sigma",
+        work=LogNormal(2.0e9, 1.0),              # sigma == 0
+        io=ShiftedExponential(5e-6, 0.0),        # rate <= 0
+        sync_per_tile_s=1e-7,
+    )
+    names = tuple(model.profiles)
+    for q in (0.5, 0.9, 0.95, 0.999):
+        for c in (1, 2, 8, 32):
+            scal = [model.bound(t, q, c) for t in names]
+            batch = model.bound_batch(names, q, np.full(len(names), c))
+            assert np.allclose(batch, scal, rtol=1e-12, atol=0.0), (q, c)
+        for t in names:
+            task = wf.tasks.get(t)
+            cands = task.dop_candidates() if task is not None else (1, 4, 16)
+            ladder = model.bound_ladder(t, q, tuple(cands))
+            scal = tuple(
+                model.profiles[t].latency_bound(q, c, model.hw.tile_flops)
+                for c in cands
+            )
+            assert np.allclose(ladder, scal, rtol=1e-12, atol=0.0), (t, q)

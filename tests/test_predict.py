@@ -262,12 +262,57 @@ def test_stale_detect_event_cannot_clobber_a_later_seam():
     e2 = rep._epoch
     # the stale detect fires: epoch mismatch, must not swap to night
     sim.now = 0.5
-    rep.on_forecast(sim, ("detect", e1, "night"), 0.5)
+    rep.on_forecast(sim, ("detect", e1, "night", 0.4), 0.5)
     assert sim.schedule is not pf.schedules["night"]
     # the live detect installs the correct table
     sim.now = 0.55
-    rep.on_forecast(sim, ("detect", e2, "rush_hour"), 0.55)
+    rep.on_forecast(sim, ("detect", e2, "rush_hour", 0.45), 0.55)
     assert sim.schedule is pf.schedules["rush_hour"]
+
+
+def test_drain_aware_activation_rides_finish_events():
+    """A drain-deferred activation arms the engine's drain watch (plus
+    one forced deadline) instead of polling: the swap lands at the
+    exact instant a finish frees the over-capacity allocation."""
+    script = ScenarioScript.parse("urban:0.8 parking:0.8")
+    sim, pf = _seam_sim(script)
+    rep = PredictiveReplanner(pf, forecaster=None, max_drain_s=0.1)
+    sim.policy.replanner = rep
+    sim._ready_sets = [set() for _ in sim.parts]
+    rep.on_run_start(sim, "urban", 0.0)
+    target = pf.schedules["parking"]
+    # occupy partition 0 beyond the parking table's capacity so the
+    # activation must wait for stragglers to drain
+    over = next(
+        p for p in sim.parts
+        if p.capacity > target.partitions[p.idx].capacity
+    )
+    job = next(j for j in sim.jobs if not j.is_sensor and j.partition == over.idx)
+    over.running[job.jid] = over.capacity
+    over.alloc = over.capacity
+    sim.now = 0.8
+    rep._staged = ModeForecaster(
+        transitions={"urban": {"parking": 1.0}},
+        mean_dwell_s={"urban": 0.8},
+    ).forecast("urban", 0.0)
+    rep.on_mode_change(sim, "parking", 0.8)
+    # deferred: the drain watch is armed, the active table unchanged
+    assert sim._drain_watch == ("drain", rep._epoch)
+    assert sim.schedule is pf.schedules["urban"]
+    assert rep._pending_act is not None
+    # a finish in another partition that does not clear the overflow:
+    # the watch re-checks and stays armed
+    sim.now = 0.82
+    sim.policy.on_forecast(sim, sim._drain_watch, sim.now)
+    assert sim.schedule is pf.schedules["urban"]
+    assert sim._drain_watch == ("drain", rep._epoch)
+    # the straggler drains: the very next watch delivery activates
+    over.alloc -= over.running.pop(job.jid)
+    sim.now = 0.85
+    sim.policy.on_forecast(sim, sim._drain_watch, sim.now)
+    assert sim.schedule is target
+    assert sim._drain_watch is None
+    assert rep._pending_act is None
 
 
 def test_reactive_detection_delay_defers_the_swap():
@@ -275,11 +320,11 @@ def test_reactive_detection_delay_defers_the_swap():
     sim, pf = _seam_sim(script, duration=1.0)
     rep = OnlineReplanner(pf, detection_delay_s=0.1)
     sim.policy.replanner = rep
-    swap_times = []
+    swaps = []
     orig = Simulator.hotswap_schedule
 
     def record(self, *a, **kw):
-        swap_times.append(self.now)
+        swaps.append((self.now, kw.get("regime_anchor_s")))
         return orig(self, *a, **kw)
 
     Simulator.hotswap_schedule = record
@@ -287,7 +332,11 @@ def test_reactive_detection_delay_defers_the_swap():
         sim.run()
     finally:
         Simulator.hotswap_schedule = orig
-    assert swap_times and np.isclose(swap_times[0], 0.6)   # seam 0.5 + 0.1
+    assert swaps and np.isclose(swaps[0][0], 0.6)   # seam 0.5 + 0.1
+    # the deferred swap still anchors the rate-aware ERT re-stagger at
+    # the *seam* — the regime's sensor timers re-anchored there, not at
+    # the detection instant
+    assert swaps[0][1] is not None and np.isclose(swaps[0][1], 0.5)
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,6 @@ from repro.core.sim.trace import (
     clear_skeleton_cache,
     counter_uniforms,
     sample_trace,
-    scalar_reference_trace,
 )
 from repro.core.workload import unroll_hyperperiod
 from repro.scenarios import ScenarioSpec, get_scenario, run_scenario
@@ -171,31 +170,49 @@ def test_mismatched_trace_rejected():
 
 
 # ---------------------------------------------------------------------------
-# distribution equivalence vs the legacy scalar path
+# distributional correctness of the counter-based stream contract
 # ---------------------------------------------------------------------------
-def test_distribution_equivalence_with_scalar_path():
-    """KS tests: per-task work and io samples from the counter-based
-    path match the legacy sequential-RandomState path in distribution
-    (they are intentionally not bit-identical)."""
+def test_sampled_streams_match_analytic_distributions():
+    """KS tests pin each stream of the counter-based sampler directly
+    against the analytic distributions it inverts: lognormal work,
+    shifted-exponential I/O, (range-clamped) lognormal sensor latency.
+    This is the contract the retired scalar ``RandomState`` reference
+    implementation used to witness indirectly."""
     scipy_stats = pytest.importorskip("scipy.stats")
     wf = make_ads_benchmark()
     model = LatencyModel.from_workflow(wf, simba_chip(400))
     skel = build_skeleton(wf, None, 30.0)       # ~300 cycles of samples
     batched = sample_trace(skel, model, None, 2)
-    legacy = scalar_reference_trace(skel, model, None, 2)
     tasks = np.asarray(skel.tasks)
     for name in ("img_backbone", "traj_pred", "lidar_det"):
-        ix = np.flatnonzero((tasks == name))
+        prof = model.profiles[name]
+        ix = np.flatnonzero(tasks == name)
         assert len(ix) >= 200
-        for field in ("work", "io"):
-            a = getattr(batched, field)[ix]
-            b = getattr(legacy, field)[ix]
-            stat = scipy_stats.ks_2samp(a, b)
-            assert stat.pvalue > 0.005, (name, field, stat)
-    # sensor latency stream too
+        work = scipy_stats.kstest(
+            batched.work[ix],
+            lambda x, p=prof.work: scipy_stats.lognorm.cdf(
+                x, p.sigma, scale=float(np.exp(p.mu))
+            ),
+        )
+        assert work.pvalue > 0.005, (name, "work", work)
+        io = scipy_stats.kstest(
+            batched.io[ix],
+            lambda x, p=prof.io: scipy_stats.expon.cdf(
+                x, loc=p.base, scale=1.0 / p.rate
+            ),
+        )
+        assert io.pvalue > 0.005, (name, "io", io)
+    # sensor latency stream: lognormal through the legacy-range clamp
+    # (uniforms mapped into (0.001, 0.999) before the inverse CDF)
+    prof = model.profiles["cam_multi"].sensor_latency
     ix = np.flatnonzero(tasks == "cam_multi")
-    stat = scipy_stats.ks_2samp(batched.sensor_lat[ix], legacy.sensor_lat[ix])
-    assert stat.pvalue > 0.005, stat
+    sen = scipy_stats.kstest(
+        batched.sensor_lat[ix],
+        lambda x, p=prof: scipy_stats.lognorm.cdf(
+            x, p.sigma, scale=float(np.exp(p.mu))
+        ),
+    )
+    assert sen.pvalue > 0.005, sen
 
 
 def test_lognormal_quantiles_match_scalar():
