@@ -43,7 +43,10 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
         for policy in ("ads_tile", "tp_driven"):
             # one portfolio per (scenario, policy): the replanned and
             # pinned variants start from the identical table
-            base = ScenarioSpec(scenario=scen, policy=policy, seed=seed)
+            # record=True: every run carries the flight recorder, so
+            # the rows also report the deadline-miss decomposition
+            base = ScenarioSpec(scenario=scen, policy=policy, seed=seed,
+                                record=True)
             base = dataclasses.replace(base, portfolio=compile_portfolio(base))
             for replan in (True, False):
                 r = run_scenario(dataclasses.replace(base, replan=replan),
@@ -52,20 +55,29 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
                     f"{m}_viol={s.violation_rate:.4f}"
                     for m, s in sorted(r.mode_stats.items())
                 )
+                att = r.attribution or {}
+                comp = att.get("components_s", {})
+                att_str = (
+                    f"late={att.get('n_late', 0)};"
+                    f"att_queue={comp.get('queueing', 0.0):.4f};"
+                    f"att_stall={comp.get('realloc_stall', 0.0):.4f};"
+                    f"att_stagger={comp.get('restagger', 0.0):.4f};"
+                    f"att_tail={comp.get('duration_tail', 0.0):.4f}"
+                )
                 tag = "replan" if replan else "pinned"
                 emit(
                     f"figS_{name}_{policy}_{tag}",
                     r.violation_rate * 1e6,
                     f"viol={r.violation_rate:.4f};miss={r.task_miss_rate:.4f};"
                     f"realloc={r.realloc_frac:.4f};"
-                    f"switches={r.n_mode_switches};{per_mode}",
+                    f"switches={r.n_mode_switches};{att_str};{per_mode}",
                 )
 
     # -- part 2: Monte-Carlo sweep of random drives ---------------------
     n = max(4, int(round(20 * duration)))
     rows = sweep(
         n, policies=("ads_tile", "tp_driven"),
-        duration_s=2.0, seed=seed,
+        duration_s=2.0, seed=seed, record=True,
     )
     agg = aggregate_sweep(rows)
     for pol, a in agg.items():
@@ -73,10 +85,19 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
             f"{m}_viol={st['violation_rate']:.4f}"
             for m, st in a["per_mode"].items()
         )
+        att = a.get("attribution") or {}
+        comp = att.get("components_s", {})
+        att_str = (
+            f"late={att.get('n_late', 0)};"
+            f"att_queue={comp.get('queueing', 0.0):.4f};"
+            f"att_stall={comp.get('realloc_stall', 0.0):.4f};"
+            f"att_stagger={comp.get('restagger', 0.0):.4f};"
+            f"att_tail={comp.get('duration_tail', 0.0):.4f}"
+        )
         emit(
             f"figS_sweep_{pol}",
             a["violation_rate"] * 1e6,
             f"n={a['n']};viol={a['violation_rate']:.4f};"
             f"miss={a['task_miss_rate']:.4f};"
-            f"realloc={a['realloc_frac']:.4f};{per_mode}",
+            f"realloc={a['realloc_frac']:.4f};{att_str};{per_mode}",
         )

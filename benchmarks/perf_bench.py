@@ -106,6 +106,38 @@ def _build_benchmark(duration: float, seed: int) -> None:
          f"jobs_per_s={skel.n * reps / dt_batched:.0f}")
 
 
+def _recorder_benchmark(duration: float, seed: int) -> None:
+    """Flight-recorder cost on a pinned engine run: hooks compiled in
+    but recorder detached (``perf_recorder_off``, the default every
+    sweep pays) vs a :class:`~repro.obs.TraceRecorder` attached
+    (``perf_recorder_on``).  The *off* row is the one the perf gate
+    asserts on — the hooks' ``if rec is not None`` guards must stay
+    invisible in the wall-clock."""
+    from repro.obs import TraceRecorder
+
+    spec = ExperimentSpec(policy="ads_tile", tiles=400, cockpit_replicas=4,
+                          duration_s=2.0, seed=seed)
+    wf, _hw, model, compiler = build_stack(spec)
+    sched = compiler.compile(model, wf)
+    reps = max(3, int(round(10 * duration)))
+
+    def loop(make_rec) -> float:
+        t0 = time.perf_counter()
+        for i in range(reps):
+            pol = make_policy("ads_tile")
+            Simulator(wf, model, sched, pol,
+                      SimConfig(duration_s=2.0, seed=seed + i,
+                                recorder=make_rec())).run()
+        return time.perf_counter() - t0
+
+    loop(lambda: None)  # warm caches
+    dt_off = loop(lambda: None)
+    dt_on = loop(TraceRecorder)
+    emit("perf_recorder_off", dt_off / reps * 1e6, f"seconds={dt_off:.3f}")
+    emit("perf_recorder_on", dt_on / reps * 1e6,
+         f"overhead_pct={100.0 * (dt_on - dt_off) / dt_off:.1f}")
+
+
 def _sweep_benchmark(duration: float, seed: int) -> None:
     gen = MarkovScenarioGenerator(transitions=PERF_TRANSITIONS,
                                   mean_dwell_s=PERF_DWELL)
@@ -125,4 +157,5 @@ def _sweep_benchmark(duration: float, seed: int) -> None:
 
 def run(duration: float = 1.0, seed: int = 1) -> None:
     _build_benchmark(duration, seed)
+    _recorder_benchmark(duration, seed)
     _sweep_benchmark(duration, seed)

@@ -25,6 +25,8 @@ import sys
 import time
 from pathlib import Path
 
+from repro.obs import metrics
+
 from . import fig6_casestudy, fig11_ablation, fig12_e2e, fig13_scaling
 from . import figS_budget, figS_predict, figS_rates, figS_scenarios, headroom
 from . import perf_bench, roofline, table2_overhead
@@ -78,9 +80,31 @@ def _suite_worker(args: tuple) -> str:
     return buf.getvalue()
 
 
+def _export_trace(path_str: str, duration: float, seed: int) -> None:
+    """Record one rate_churn run and export a Perfetto/Chrome trace."""
+    from repro.obs import TraceRecorder, export_chrome_trace
+    from repro.scenarios import ScenarioSpec, get_scenario
+    from repro.scenarios.runner import run_scenario
+
+    rec = TraceRecorder()
+    spec = ScenarioSpec(
+        scenario=get_scenario("rate_churn"), policy="ads_tile", seed=seed,
+        duration_s=max(duration, 1.0),
+    )
+    report = run_scenario(spec, recorder=rec)
+    path = Path(path_str)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    export_chrome_trace(rec, str(path))
+    att = report.attribution or {}
+    print(f"# wrote {path} ({len(rec)} events, "
+          f"{att.get('n_late', 0)} late chains)", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names ('none' runs no suite "
+                         "— useful with --trace-out)")
     ap.add_argument("--duration", type=float, default=1.0,
                     help="simulated seconds per experiment")
     ap.add_argument("--seed", type=int, default=1)
@@ -89,13 +113,24 @@ def main() -> None:
     ap.add_argument("--out", default=None, metavar="FILE",
                     help="also write the rows as structured JSON "
                          "(consumed by benchmarks.make_tables)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="record one rate_churn run with the flight "
+                         "recorder and write a Perfetto/Chrome trace JSON")
     args = ap.parse_args()
 
-    names = args.only.split(",") if args.only else list(SUITES)
+    if args.only == "none":
+        names = []
+    else:
+        names = args.only.split(",") if args.only else list(SUITES)
     names = [ALIASES.get(n, n) for n in names]
     unknown = [n for n in names if n not in SUITES]
     if unknown:
         ap.error(f"unknown suite(s) {unknown} (choose from {list(SUITES)})")
+    if args.out or args.trace_out:
+        # self-profiling: compile/sample/engine phase timers land in the
+        # JSON "profile" section (parent process only — worker processes
+        # profile themselves and are not aggregated here)
+        metrics.enable()
     print("name,us_per_call,derived")
     outputs = []
     if args.jobs > 1 and len(names) > 1:
@@ -122,6 +157,9 @@ def main() -> None:
                 SUITES[name](duration=args.duration, seed=args.seed)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
+    if args.trace_out:
+        _export_trace(args.trace_out, args.duration, args.seed)
+
     if args.out:
         path = Path(args.out)
         path.parent.mkdir(parents=True, exist_ok=True)
@@ -130,6 +168,7 @@ def main() -> None:
             "duration": args.duration,
             "seed": args.seed,
             "rows": _rows_from_csv("".join(outputs)),
+            "profile": metrics.snapshot(),
         }, indent=2))
         print(f"# wrote {path}", file=sys.stderr)
 

@@ -8,7 +8,7 @@ here — GHA is the *common adaptation layer*, §III-A3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from ..latency_model import LatencyModel
 from ..workload import Workflow
@@ -43,7 +43,14 @@ class GHACompiler:
     bind_physical: bool = True
     tile_budget: Optional[int] = None
 
-    def compile(self, model: LatencyModel, wf: Workflow) -> Schedule:
+    def compile(
+        self,
+        model: LatencyModel,
+        wf: Workflow,
+        warm_start: Optional[Dict[str, int]] = None,
+    ) -> Schedule:
+        """Run Phases I-III and bind; ``warm_start`` (task -> bin) seeds
+        Phase II from a neighbouring compile's final partitioning."""
         hw = model.hw
         m = hw.num_tiles
         if self.tile_budget is not None:
@@ -55,7 +62,7 @@ class GHACompiler:
         if n_parts is None:
             n_parts = len(wf.chains)
         n_parts = max(1, min(n_parts, len(wf.dnn_tasks)))
-        p2 = run_phase2(wf, p1, n_parts, self.phase2_weights)
+        p2 = run_phase2(wf, p1, n_parts, self.phase2_weights, warm_start=warm_start)
 
         p3 = run_phase3(model, wf, p1, p2, m, self.q)
 

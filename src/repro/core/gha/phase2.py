@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from ...obs import metrics
 from ..workload import Workflow, unroll_hyperperiod
 from .phase1 import Phase1Result, chain_priority
 
@@ -189,52 +190,84 @@ class _Scorer:
         return score, caps
 
 
+def _warm_bins(
+    warm_start: Dict[str, int], dops: Dict[str, int], target: int
+) -> Optional[List[List[str]]]:
+    """Rebuild Phase-II bins from a neighbouring cell's final assignment.
+
+    Valid only when the assignment covers exactly this cell's task set
+    and its group count matches the target bin count — otherwise the
+    caller falls back to the cold chain-grouped construction."""
+    if set(warm_start) != set(dops):
+        return None
+    groups: Dict[int, List[str]] = {}
+    for t in sorted(dops):
+        groups.setdefault(warm_start[t], []).append(t)
+    if len(groups) != target:
+        return None
+    return [groups[g] for g in sorted(groups)]
+
+
 def run_phase2(
     wf: Workflow,
     p1: Phase1Result,
     num_partitions: int,
     weights: Tuple[float, float, float] = (2.0, 1.0, 3.0),
     local_search_rounds: int = 4,
+    warm_start: Optional[Dict[str, int]] = None,
 ) -> Phase2Result:
     """Partition tasks into ``num_partitions`` bins.
 
     ``num_partitions=1`` reproduces the Tp-driven single-bin view; larger
     values give the configurable-isolation domains of §IV-B1.
+
+    ``warm_start`` (task -> bin) seeds the search with a neighbouring
+    compile cell's final assignment, skipping the chain-grouped
+    construction and the O(S²) greedy merge; the single-task local
+    search still runs, so a warm start converges to the same fixed
+    points the cold path reaches from a nearby basin.
     """
     dops = {t: c for t, (c, _) in p1.shapes.items() if not wf.tasks[t].is_sensor}
     windows = build_windows(wf, p1)
     scorer = _Scorer(wf, dops, windows)
 
-    # -- initial: one bin per chain (priority order; first chain wins a
-    #    shared task) ------------------------------------------------------
-    bins: List[List[str]] = []
-    seen: set = set()
-    for chain in sorted(wf.chains, key=lambda c: chain_priority(wf, c)):
-        members = [
-            n for n in chain.nodes
-            if not wf.tasks[n].is_sensor and n not in seen
-        ]
-        if members:
-            bins.append(members)
-            seen.update(members)
-    leftovers = [t for t in dops if t not in seen]
-    if leftovers:
-        bins.append(leftovers)
+    bins: Optional[List[List[str]]] = None
+    if warm_start is not None:
+        bins = _warm_bins(warm_start, dops, max(num_partitions, 1))
+    if bins is not None:
+        metrics.count("phase2_warm_start")
+    else:
+        metrics.count("phase2_cold_start")
+        # -- initial: one bin per chain (priority order; first chain wins
+        #    a shared task) ------------------------------------------------
+        bins = []
+        seen: set = set()
+        for chain in sorted(wf.chains, key=lambda c: chain_priority(wf, c)):
+            members = [
+                n for n in chain.nodes
+                if not wf.tasks[n].is_sensor and n not in seen
+            ]
+            if members:
+                bins.append(members)
+                seen.update(members)
+        leftovers = [t for t in dops if t not in seen]
+        if leftovers:
+            bins.append(leftovers)
 
-    # -- greedy merging down to the target S (Fig. 5a) --------------------
-    while len(bins) > max(num_partitions, 1):
-        best = None
-        for i in range(len(bins)):
-            for j in range(i + 1, len(bins)):
-                trial = [b for k, b in enumerate(bins) if k not in (i, j)]
-                trial.append(bins[i] + bins[j])
-                sc, _ = scorer.score(trial, weights)
-                if best is None or sc < best[0]:
-                    best = (sc, i, j)
-        _, i, j = best
-        merged = bins[i] + bins[j]
-        bins = [b for k, b in enumerate(bins) if k not in (i, j)]
-        bins.append(merged)
+        # -- greedy merging down to the target S (Fig. 5a) ----------------
+        while len(bins) > max(num_partitions, 1):
+            best = None
+            for i in range(len(bins)):
+                for j in range(i + 1, len(bins)):
+                    trial = [b for k, b in enumerate(bins) if k not in (i, j)]
+                    trial.append(bins[i] + bins[j])
+                    sc, _ = scorer.score(trial, weights)
+                    if best is None or sc < best[0]:
+                        best = (sc, i, j)
+            _, i, j = best
+            merged = bins[i] + bins[j]
+            bins = [b for k, b in enumerate(bins) if k not in (i, j)]
+            bins.append(merged)
 
     # -- local search: single-task moves ----------------------------------
     score, caps = scorer.score(bins, weights)

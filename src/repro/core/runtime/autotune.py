@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ...obs import metrics
 from ..gha.compiler import GHACompiler
 from ..gha.schedule import Schedule
 from ..latency_model import LatencyModel
@@ -306,6 +307,7 @@ def _compile_point(
     n_parts: Optional[int],
     budget: Optional[int],
     dop_prune: Optional[float] = None,
+    warm_start: Optional[Dict[str, int]] = None,
 ) -> FrontierPoint:
     # None means "the compiler's own ceiling" — a caller-configured
     # GHACompiler.tile_budget stays authoritative for full compiles and
@@ -316,7 +318,7 @@ def _compile_point(
         budget = min(budget, compiler.tile_budget)
     sched = dataclasses.replace(
         compiler, q=q, num_partitions=n_parts, tile_budget=budget
-    ).compile(model, wf)
+    ).compile(model, wf, warm_start=warm_start)
     feasible = (
         not sched.meta["phase1_infeasible"]
         and not sched.meta["phase3_violations"]
@@ -401,34 +403,54 @@ def autotune_mode(
             seen.add(p.key())
             points.append(p)
 
-    for n_parts in grid:
-        found_feasible = False
-        compiled_qs: set = set()
-        for q in qs:
-            if not _chain_feasible(model, wf, q, m):
-                continue
-            p = _compile_point(model, wf, compiler, q, n_parts, None, dop_prune)
-            compiled_qs.add(q)
-            add(p)
-            if p.feasible:
-                found_feasible = True
-                for frac in budget_fracs:
-                    budget = int(math.floor(p.tiles * frac))
-                    if budget < len(p.schedule.partitions) or budget >= p.tiles:
-                        continue
-                    shrunk = _compile_point(
-                        model, wf, compiler, q, n_parts, budget, dop_prune
+    with metrics.phase("autotune_search"):
+        for n_parts in grid:
+            found_feasible = False
+            compiled_qs: set = set()
+            for q in qs:
+                if not _chain_feasible(model, wf, q, m):
+                    continue
+                p = _compile_point(model, wf, compiler, q, n_parts, None, dop_prune)
+                compiled_qs.add(q)
+                add(p)
+                if p.feasible:
+                    found_feasible = True
+                    # budget-shrunk recompiles of the same (q, n_parts)
+                    # cell warm-start Phase II from the full-budget
+                    # compile's final partitioning — the task set is
+                    # identical and the basin is adjacent, so the
+                    # chain-grouped init + greedy merge are skipped.
+                    # Full-budget compiles stay cold: they must remain
+                    # bitwise equal to the legacy ladder's.
+                    warm = {t: pl.partition for t, pl in p.schedule.plans.items()}
+                    for frac in budget_fracs:
+                        budget = int(math.floor(p.tiles * frac))
+                        if budget < len(p.schedule.partitions) or budget >= p.tiles:
+                            continue
+                        shrunk = _compile_point(
+                            model,
+                            wf,
+                            compiler,
+                            q,
+                            n_parts,
+                            budget,
+                            dop_prune,
+                            warm_start=warm,
+                        )
+                        if shrunk.feasible:
+                            add(shrunk)
+                    if stop_at_feasible:
+                        break
+            if not found_feasible and qs[-1] not in compiled_qs:
+                # ladder fallback: no feasible cell and the lowest quantile
+                # was pruned away — compile it anyway so the portfolio has
+                # the same (flagged-infeasible) last-rung table to degrade
+                # onto that the legacy ladder kept
+                add(
+                    _compile_point(
+                        model, wf, compiler, qs[-1], n_parts, None, dop_prune
                     )
-                    if shrunk.feasible:
-                        add(shrunk)
-                if stop_at_feasible:
-                    break
-        if not found_feasible and qs[-1] not in compiled_qs:
-            # ladder fallback: no feasible cell and the lowest quantile
-            # was pruned away — compile it anyway so the portfolio has
-            # the same (flagged-infeasible) last-rung table to degrade
-            # onto that the legacy ladder kept
-            add(_compile_point(model, wf, compiler, qs[-1], n_parts, None, dop_prune))
+                )
 
     frontier = ModeFrontier(mode=mode_name, points=points)
     _FRONTIER_CACHE[cache_key] = frontier

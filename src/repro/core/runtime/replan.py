@@ -35,6 +35,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Mapping, Optional, TYPE_CHECKING
 
+from ...obs import metrics
 from ..gha.compiler import GHACompiler
 from ..gha.schedule import Schedule
 from ..latency_model import LatencyModel
@@ -127,73 +128,74 @@ class SchedulePortfolio:
         portfolio's total reserved tiles (subject to every mode meeting
         the target) wins.
         """
-        compiler = compiler or GHACompiler()
-        explore = target_miss is not None
-        base_p = compiler.num_partitions
-        frontiers: Dict[str, ModeFrontier] = {}
-        mode_wfs: Dict[str, Workflow] = {}
-        for name, mode in modes.items():
-            m_model = mode.transform_model(model)
-            transform_wf = getattr(mode, "transform_workflow", None)
-            m_wf = transform_wf(wf) if transform_wf is not None else wf
-            if explore and base_p is not None and base_p > 1:
-                n_dnn = len(m_wf.dnn_tasks)
-                grid = tuple(dict.fromkeys(
-                    max(2, min(p, n_dnn))
-                    for p in range(base_p - partition_span,
-                                   base_p + partition_span + 1)
-                ))
-            else:
-                grid = (base_p,)
-            frontiers[name] = autotune_mode(
-                m_model, m_wf, compiler,
-                q_grid=tuple(q_ladder),
-                partition_grid=grid,
-                budget_fracs=tuple(budget_fracs) if explore else (),
-                stop_at_feasible=not explore,
-                mode_name=name,
-                dop_prune=dop_prune,
-            )
-            mode_wfs[name] = m_wf
+        with metrics.phase("portfolio_compile"):
+            compiler = compiler or GHACompiler()
+            explore = target_miss is not None
+            base_p = compiler.num_partitions
+            frontiers: Dict[str, ModeFrontier] = {}
+            mode_wfs: Dict[str, Workflow] = {}
+            for name, mode in modes.items():
+                m_model = mode.transform_model(model)
+                transform_wf = getattr(mode, "transform_workflow", None)
+                m_wf = transform_wf(wf) if transform_wf is not None else wf
+                if explore and base_p is not None and base_p > 1:
+                    n_dnn = len(m_wf.dnn_tasks)
+                    grid = tuple(dict.fromkeys(
+                        max(2, min(p, n_dnn))
+                        for p in range(base_p - partition_span,
+                                       base_p + partition_span + 1)
+                    ))
+                else:
+                    grid = (base_p,)
+                frontiers[name] = autotune_mode(
+                    m_model, m_wf, compiler,
+                    q_grid=tuple(q_ladder),
+                    partition_grid=grid,
+                    budget_fracs=tuple(budget_fracs) if explore else (),
+                    stop_at_feasible=not explore,
+                    mode_name=name,
+                    dop_prune=dop_prune,
+                )
+                mode_wfs[name] = m_wf
 
-        # joint spatial harmonization: hot-swaps require every mode of
-        # a portfolio to share one partition count
-        p_star: Optional[int] = None
-        if explore:
-            common = set.intersection(
-                *(set(f.partition_counts()) for f in frontiers.values())
-            )
-            if common:
-                def p_score(p: int) -> tuple:
-                    sels = [f.select(target_miss, p) for f in frontiers.values()]
-                    short = sum(
-                        (not s.feasible) or s.miss > target_miss for s in sels
-                    )
-                    tiles = sum(s.tiles for s in sels)
-                    anchor = abs(p - base_p) if base_p is not None else 0
-                    return (short, tiles, anchor, p)
-                p_star = min(sorted(common), key=p_score)
+            # joint spatial harmonization: hot-swaps require every mode of
+            # a portfolio to share one partition count
+            p_star: Optional[int] = None
+            if explore:
+                common = set.intersection(
+                    *(set(f.partition_counts()) for f in frontiers.values())
+                )
+                if common:
+                    def p_score(p: int) -> tuple:
+                        sels = [f.select(target_miss, p) for f in frontiers.values()]
+                        short = sum(
+                            (not s.feasible) or s.miss > target_miss for s in sels
+                        )
+                        tiles = sum(s.tiles for s in sels)
+                        anchor = abs(p - base_p) if base_p is not None else 0
+                        return (short, tiles, anchor, p)
+                    p_star = min(sorted(common), key=p_score)
 
-        out: Dict[str, Schedule] = {}
-        selected: Dict[str, FrontierPoint] = {}
-        for name, frontier in frontiers.items():
-            point = frontier.select(target_miss, p_star)
-            m_wf = mode_wfs[name]
-            sched = point.schedule
-            sched.meta["mode"] = name
-            sched.meta["hyper_period_s"] = m_wf.hyper_period_s
-            # per-task activation periods under this mode's sensor
-            # rates: the engine's rate-aware hot-swap re-staggers
-            # PENDING ERTs onto the incoming regime's release grid
-            # whenever these differ from the outgoing table's
-            sched.meta["task_period_s"] = {
-                t: 1.0 / m_wf.task_rate_hz(t)
-                for t, task in m_wf.tasks.items() if not task.is_sensor
-            }
-            sched.meta["autotune"] = frontier.meta(point)
-            out[name] = sched
-            selected[name] = point
-        return cls(out, frontiers=frontiers, selected=selected)
+            out: Dict[str, Schedule] = {}
+            selected: Dict[str, FrontierPoint] = {}
+            for name, frontier in frontiers.items():
+                point = frontier.select(target_miss, p_star)
+                m_wf = mode_wfs[name]
+                sched = point.schedule
+                sched.meta["mode"] = name
+                sched.meta["hyper_period_s"] = m_wf.hyper_period_s
+                # per-task activation periods under this mode's sensor
+                # rates: the engine's rate-aware hot-swap re-staggers
+                # PENDING ERTs onto the incoming regime's release grid
+                # whenever these differ from the outgoing table's
+                sched.meta["task_period_s"] = {
+                    t: 1.0 / m_wf.task_rate_hz(t)
+                    for t, task in m_wf.tasks.items() if not task.is_sensor
+                }
+                sched.meta["autotune"] = frontier.meta(point)
+                out[name] = sched
+                selected[name] = point
+            return cls(out, frontiers=frontiers, selected=selected)
 
 
 def blend_schedules(

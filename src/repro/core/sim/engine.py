@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ...obs import metrics
 from ..gha.schedule import Schedule
 from ..hardware import HardwareModel
 from ..latency_model import LatencyModel
@@ -209,6 +210,13 @@ class SimConfig:
     #: trace whose skeleton key does not match this run; the caller
     #: must also sample it from an equal latency model.
     trace: Optional[Trace] = None
+    #: optional flight recorder (duck-typed
+    #: :class:`~repro.obs.events.TraceRecorder` so the engine stays
+    #: independent of the obs package): every hook site is one
+    #: ``if rec is not None`` check, so a recorder-less run executes
+    #: the same arithmetic as before the hooks existed and pinned-seed
+    #: reports stay bit-identical (pinned by ``tests/test_obs.py``).
+    recorder: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -309,6 +317,10 @@ class SimReport:
     #: frontier of (tiles, miss, q, partitions).  Empty for schedules
     #: compiled outside the autotuner.
     frontier_meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+    #: deadline-miss attribution summary
+    #: (:func:`~repro.obs.attribution.attribution_report`); filled by
+    #: the scenario runner for recorded runs, ``None`` otherwise
+    attribution: Optional[Dict[str, object]] = None
 
     @property
     def violation_rate(self) -> float:
@@ -343,6 +355,9 @@ class Simulator:
         self.cfg = config or SimConfig()
         if self.cfg.duration_s <= 0:
             raise ValueError("SimConfig.duration_s must be > 0")
+        # flight recorder (None in production runs: every hook below is
+        # a single ``is not None`` check on this local)
+        self._rec = self.cfg.recorder
         self.hw: HardwareModel = model.hw
 
         self.now = 0.0
@@ -556,6 +571,11 @@ class Simulator:
         job.last_t = self.now
         part.running[job.jid] = dop
         part.alloc += dop
+        if self._rec is not None:
+            self._rec.emit(
+                self.now, "job_start", jid=job.jid, task=job.task,
+                partition=job.partition, value=dop,
+            )
         if part.stalled:
             job.rate = 0.0  # will start when the stall ends
         else:
@@ -633,8 +653,10 @@ class Simulator:
         # apply new dops now (tiles occupied during the stall);
         # dop == 0 preempts back to the ready queue
         shrunk = False
+        rec = self._rec
         for jid, d in changed.items():
             job = self.jobs[jid]
+            old = part.running[jid]
             if d == 0:
                 part.alloc -= part.running.pop(jid)
                 job.dop = 0
@@ -642,10 +664,20 @@ class Simulator:
                 self._ready_sets[partition].add(job)
                 shrunk = True
             else:
-                shrunk = shrunk or d < part.running[jid]
-                part.alloc += d - part.running[jid]
+                shrunk = shrunk or d < old
+                part.alloc += d - old
                 part.running[jid] = d
                 job.dop = d
+            if rec is not None:
+                rec.emit(
+                    self.now, "job_resize", jid=jid, task=job.task,
+                    partition=partition, value=d, data={"old": old},
+                )
+        if rec is not None:
+            rec.emit(
+                self.now, "realloc", partition=partition, value=moved,
+                data={"stall_s": stall, "n_resized": len(changed)},
+            )
         if shrunk:
             self._notify_drain()
         self._begin_stall(part, moved, stall)
@@ -669,6 +701,12 @@ class Simulator:
         part.stalled = True
         part.stall_end = max(part.stall_end, self.now + stall)
         self._push(part.stall_end, "resume", (part.idx,))
+        if self._rec is not None:
+            self._rec.emit(
+                self.now, "stall_begin", partition=part.idx, value=stall,
+                data={"bytes": moved},
+            )
+            self._rec.stall_begin(part.idx, self.now)
 
     def _plan_deltas(self, new: Schedule):
         """Weight/feature stage-in volume per plan of ``new`` that is
@@ -724,6 +762,14 @@ class Simulator:
             self.parts[plan.partition].realloc_bytes += volume
             self._staged_plans[task] = (plan.partition, plan.dop)
             total += volume
+        if self._rec is not None:
+            self._rec.emit(
+                self.now, "prestage", value=total,
+                data={
+                    "window_s": window_s,
+                    "per_partition": {p: b for p, b in sorted(spent.items())},
+                },
+            )
         return total
 
     def hotswap_schedule(
@@ -821,6 +867,12 @@ class Simulator:
                         * part.running[jid]
                     )
                     self._advance_job(job)
+                    if self._rec is not None:
+                        self._rec.emit(
+                            self.now, "job_preempt", jid=jid, task=job.task,
+                            partition=part.idx, value=part.running[jid],
+                            info="hotswap_shrink",
+                        )
                     part.alloc -= part.running.pop(jid)
                     job.rate = 0.0
                     job.gen += 1
@@ -886,6 +938,15 @@ class Simulator:
         self.schedule = new
         # the installed table's state overwrites the staging buffers
         self._staged_plans.clear()
+        if self._rec is not None:
+            self._rec.emit(
+                self.now, "hotswap", value=total_stall,
+                info=str(new.meta.get("mode", "")),
+                data={
+                    "peak_tiles": new.peak_tiles,
+                    "prestage_window_s": prestage_window_s,
+                },
+            )
         return total_stall
 
     def preempt(self, job: Job) -> None:
@@ -898,21 +959,34 @@ class Simulator:
         job.rate = 0.0
         job.gen += 1
         job.dop = 0
-        part.alloc -= part.running.pop(job.jid)
+        freed = part.running.pop(job.jid)
+        part.alloc -= freed
         job.state = JobState.READY
         self._ready_sets[job.partition].add(job)
+        if self._rec is not None:
+            self._rec.emit(
+                self.now, "job_preempt", jid=job.jid, task=job.task,
+                partition=job.partition, value=freed,
+            )
         self._notify_drain()
 
     def terminate(self, job: Job, reason: str = "deadline") -> None:
         """Drop a job (Cyc. budget overrun / E2E-deadline dequeue)."""
         part = self.parts[job.partition] if job.partition >= 0 else None
+        freed = 0
         if job.state == JobState.RUNNING and part is not None:
             self._touch(part)
             self._advance_job(job)
-            part.alloc -= part.running.pop(job.jid)
+            freed = part.running.pop(job.jid)
+            part.alloc -= freed
             self._notify_drain()
         elif job.state == JobState.READY:
             self._ready_sets[job.partition].discard(job)
+        if self._rec is not None:
+            self._rec.emit(
+                self.now, "job_drop", jid=job.jid, task=job.task,
+                partition=job.partition, value=freed, info=reason,
+            )
         job.state = JobState.DROPPED
         job.finish_t = self.now
         job.rate = 0.0
@@ -934,6 +1008,8 @@ class Simulator:
         ``policy.on_forecast(sim, payload, now)`` when it fires (used by
         the predictive replanner to wake up ahead of a predicted seam).
         ``payload`` is opaque to the engine."""
+        if self._rec is not None:
+            self._rec.emit(self.now, "forecast_arm", value=t)
         self._push(t, "forecast", (payload,))
 
     def arm_drain_watch(self, payload: object) -> None:
@@ -946,9 +1022,13 @@ class Simulator:
         (before the policy can refill the freed tiles); drops from
         within a policy pass are delivered as a same-timestamp event so
         the pass is never re-entered mid-flight."""
+        if self._drain_watch is None and self._rec is not None:
+            self._rec.emit(self.now, "drain_arm")
         self._drain_watch = payload
 
     def clear_drain_watch(self) -> None:
+        if self._drain_watch is not None and self._rec is not None:
+            self._rec.emit(self.now, "drain_clear")
         self._drain_watch = None
 
     def _notify_drain(self) -> None:
@@ -972,20 +1052,33 @@ class Simulator:
                 if succ.is_sensor:
                     continue
                 self._ready_sets[succ.partition].add(succ)
+                if self._rec is not None:
+                    self._rec.emit(
+                        self.now, "job_ready", jid=succ.jid, task=succ.task,
+                        partition=succ.partition,
+                    )
                 self._push(self.now, "ready", (succ.jid,))
                 if succ.ert > self.now:
                     self._push(succ.ert, "ert", (succ.jid,))
 
     def _finish_job(self, job: Job) -> None:
         part = self.parts[job.partition] if job.partition >= 0 else None
+        freed = 0
         if part is not None and job.jid in part.running:
             self._touch(part)
-            part.alloc -= part.running.pop(job.jid)
+            freed = part.running.pop(job.jid)
+            part.alloc -= freed
         job.state = JobState.DONE
         job.progress = 1.0
         job.finish_t = self.now
         job.rate = 0.0
         job.gen += 1
+        frec = self._rec
+        if frec is not None:
+            frec.emit(
+                self.now, "job_finish", jid=job.jid, task=job.task,
+                partition=job.partition, value=freed,
+            )
         self._propagate(job)
         # chain accounting at sinks
         for chain in self.wf.chains_ending_at(job.task):
@@ -994,6 +1087,23 @@ class Simulator:
                 continue
             lat = self.now - t0
             violated = lat > chain.deadline_s + 1e-12 or job.degraded
+            if frec is not None:
+                frec.emit(
+                    self.now, "chain_complete", jid=job.jid, task=job.task,
+                    chain=chain.name, value=lat,
+                    data={
+                        "t0": t0,
+                        "deadline_s": chain.deadline_s,
+                        "src_task": chain.nodes[0],
+                        "violated": violated,
+                    },
+                )
+                if lat > chain.deadline_s + 1e-12:
+                    frec.emit(
+                        self.now, "deadline_miss", jid=job.jid,
+                        task=job.task, chain=chain.name,
+                        value=lat - chain.deadline_s,
+                    )
             self.chain_count[chain.name] += 1
             if self.cfg.collect_latencies:
                 self.chain_latencies[chain.name].append(lat)
@@ -1010,6 +1120,11 @@ class Simulator:
 
     def _record_dropped_sink(self, job: Job) -> None:
         for chain in self.wf.chains_ending_at(job.task):
+            if self._rec is not None:
+                self._rec.emit(
+                    self.now, "chain_drop", jid=job.jid, task=job.task,
+                    chain=chain.name,
+                )
             self.chain_count[chain.name] += 1
             self.chain_violations[chain.name] += 1
             if self.cfg.scenario is not None:
@@ -1023,8 +1138,29 @@ class Simulator:
     # main loop
     # ------------------------------------------------------------------
     def run(self) -> SimReport:
+        with metrics.phase("engine_run"):
+            return self._run()
+
+    def _run(self) -> SimReport:
         self._ready_sets: List[set] = [set() for _ in self.parts]
         self.policy.setup(self)
+
+        rec = self._rec
+        if rec is not None:
+            rec.meta.update(
+                duration_s=self.cfg.duration_s,
+                seed=self.cfg.seed,
+                total_tiles=self.hw.num_tiles,
+                policy=type(self.policy).__name__,
+                partitions=[p.capacity for p in self.parts],
+            )
+            rec.emit(
+                0.0, "schedule", value=self.schedule.peak_tiles,
+                data={"partitions": [p.capacity for p in self.parts]},
+            )
+            # rate-regime seams (the piecewise unroll's boundaries)
+            for r0, _r1, wf_r in self._regimes[1:]:
+                rec.emit(r0, "rate_seam", value=wf_r.hyper_period_s)
 
         # seed events: sensor jobs are released by hardware timers
         for job in self.jobs:
@@ -1063,6 +1199,10 @@ class Simulator:
                     continue
                 job.state = JobState.RUNNING
                 job.start_t = self.now
+                if rec is not None:
+                    rec.emit(
+                        self.now, "job_release", jid=job.jid, task=job.task,
+                    )
                 self._push(self.now + job.io_s, "sensor_done", (job.jid,))
             elif kind == "sensor_done":
                 self._finish_job(self.jobs[payload[0]])
@@ -1107,6 +1247,9 @@ class Simulator:
                     continue  # superseded by a longer stall (hot-swap)
                 self._touch(part)
                 part.stalled = False
+                if rec is not None:
+                    rec.emit(self.now, "stall_end", partition=part.idx)
+                    rec.stall_end(part.idx, self.now)
                 for jid in list(part.running):
                     job = self.jobs[jid]
                     self._advance_job(job)
@@ -1119,6 +1262,8 @@ class Simulator:
                     continue
                 self.policy.on_point(self, pid, self.now, "timer", job)
             elif kind == "forecast":
+                if rec is not None:
+                    rec.emit(self.now, "forecast_fire")
                 self.policy.on_forecast(self, payload[0], self.now)
             elif kind == "mode_change":
                 mode = payload[0]
@@ -1127,12 +1272,16 @@ class Simulator:
                     self._touch(part)
                 self._mode_now = mode
                 self.n_mode_switches += 1
+                if rec is not None:
+                    rec.emit(self.now, "mode_change", info=mode)
                 self.policy.on_mode_change(self, mode, self.now)
 
         # drain accounting to end time
         self.now = end_t
         for part in self.parts:
             self._touch(part)
+        if rec is not None:
+            rec.finalize(end_t)
         return self._report()
 
     # ------------------------------------------------------------------

@@ -54,6 +54,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ...obs import metrics
 from ..latency_model import LatencyModel, ndtri
 from ..workload import Workflow, unroll_hyperperiod
 
@@ -324,8 +325,20 @@ def build_skeleton(
     cached = _SKELETON_CACHE.get(key)
     if cached is not None:
         _SKELETON_CACHE.move_to_end(key)
+        metrics.count("skeleton_cache_hit")
         return cached
+    with metrics.phase("skeleton_build"):
+        skel = _build_skeleton(wf, scenario, duration_s, key)
+    _SKELETON_CACHE[key] = skel
+    while len(_SKELETON_CACHE) > _SKELETON_CACHE_MAX:
+        _SKELETON_CACHE.popitem(last=False)
+    return skel
 
+
+def _build_skeleton(
+    wf: Workflow, scenario, duration_s: float, key: tuple
+) -> TraceSkeleton:
+    """Uncached skeleton construction (see :func:`build_skeleton`)."""
     if scenario is not None and hasattr(scenario, "rate_regimes"):
         regimes = [
             r for r in scenario.rate_regimes(wf, duration_s)
@@ -345,14 +358,40 @@ def build_skeleton(
     releases: List[np.ndarray] = []
     sink_src: Dict[Tuple[str, int], float] = {}
 
+    # per-sensor timer anchors (absolute): a rate seam restarts only
+    # the *modulated* sensors' hardware timers; an unmodulated sensor
+    # keeps its own cadence across the seam.  ``anchors[s]`` is the
+    # absolute time sensor s's current grid is anchored at; the phase
+    # passed to the unroll is the anchor normalised into the regime
+    # start (snapped to 0 within 1e-9 so on-grid seams — every bundled
+    # scenario — reproduce the legacy phase-0 unroll bit-for-bit).
+    anchors: Dict[str, float] = {}
+    prev_periods: Dict[str, float] = {}
     for ri, (r0, r1, wf_r) in enumerate(regimes):
         thp = wf_r.hyper_period_s
         final = ri == len(regimes) - 1
         span = (duration_s - r0) if final else (r1 - r0)
+        phases: Dict[str, float] = {}
+        for sname, stask in wf_r.tasks.items():
+            if not stask.is_sensor:
+                continue
+            period = stask.period_s
+            if prev_periods.get(sname) != period:
+                anchors[sname] = r0    # modulated (or first regime): re-anchor
+            ph = (anchors[sname] - r0) % period
+            if ph < 1e-9 or period - ph < 1e-9:
+                ph = 0.0
+            if ph:
+                phases[sname] = ph
+            prev_periods[sname] = period
+        # empty mapping -> scalar 0.0: the exact legacy unroll-cache key
+        phase_arg = phases if phases else 0.0
         # the - 1e-9 absorbs float accumulation in segment bounds
         # (0.4 + 0.8 > 1.2), which would otherwise add an empty cycle
         n_cycles = max(1, int(math.ceil(span / thp - 1e-9)))
-        insts_full = unroll_hyperperiod(wf_r, t0=r0, t1=r0 + thp)
+        insts_full = unroll_hyperperiod(
+            wf_r, t0=r0, t1=r0 + thp, phase_s=phase_arg
+        )
         local_full = _local_structure(wf_r, insts_full, chain_sources(wf_r, insts_full))
         for cycle in range(n_cycles):
             off = cycle * thp
@@ -365,7 +404,12 @@ def build_skeleton(
                 rel = local.release + off
                 src_off = off
             else:                           # truncated seam cycle
-                insts = unroll_hyperperiod(wf_r, t0=base, t1=t1)
+                # the r0-relative phases stay valid at ``base``: thp is
+                # a multiple of every sensor period, so the grid offset
+                # is congruent modulo each period
+                insts = unroll_hyperperiod(
+                    wf_r, t0=base, t1=t1, phase_s=phase_arg
+                )
                 local = _local_structure(wf_r, insts, chain_sources(wf_r, insts))
                 rel = local.release
                 src_off = 0.0
@@ -474,9 +518,6 @@ def build_skeleton(
         sink_src=sink_src,
         regimes=regimes,
     )
-    _SKELETON_CACHE[key] = skel
-    while len(_SKELETON_CACHE) > _SKELETON_CACHE_MAX:
-        _SKELETON_CACHE.popitem(last=False)
     return skel
 
 
@@ -583,6 +624,16 @@ def sample_trace(
     contract (module docstring) — bit-identical to per-bucket
     :func:`counter_uniforms` calls.
     """
+    with metrics.phase("trace_sample"):
+        return _sample_trace(skel, model, scenario, seed)
+
+
+def _sample_trace(
+    skel: TraceSkeleton,
+    model: LatencyModel,
+    scenario,
+    seed: int,
+) -> Trace:
     n = skel.n
     work = np.zeros(n, dtype=np.float64)
     io = np.zeros(n, dtype=np.float64)

@@ -16,7 +16,9 @@ import math
 from collections import OrderedDict
 from fractions import Fraction
 from functools import reduce
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import (
+    Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, Union,
+)
 
 __all__ = [
     "Task",
@@ -360,7 +362,7 @@ def unroll_hyperperiod(
     wf: Workflow,
     t0: float = 0.0,
     t1: Optional[float] = None,
-    phase_s: float = 0.0,
+    phase_s: Union[float, Mapping[str, float]] = 0.0,
 ) -> List[TaskInstance]:
     """Unroll the DAG over a segment ``[t0, t1)`` (paper §II-C2).
 
@@ -376,12 +378,24 @@ def unroll_hyperperiod(
     the regime boundary, and the piecewise unrollings on either side
     share no instances (no double-released, no lost jobs).  ``t1 - t0``
     need not be a multiple of the hyper-period.
+
+    ``phase_s`` may also be a mapping ``{sensor name: phase}``: only
+    the listed sensors re-anchor at ``t0 + phase``, the rest stay on
+    the ``t0`` grid.  This is what a *rate seam* needs — the modulated
+    sensor's hardware timer restarts at the seam, but an unmodulated
+    sensor keeps its own cadence across it (see
+    :func:`repro.core.sim.trace.build_skeleton`); a sensor missing from
+    the mapping gets phase 0.
     """
     if t1 is None:
         t1 = t0 + wf.hyper_period_s
     if t1 <= t0:
         raise ValueError(f"empty unroll segment [{t0}, {t1})")
-    key = (wf.structural_signature, t0, t1, phase_s)
+    per_sensor = isinstance(phase_s, Mapping)
+    phase_key = (
+        tuple(sorted(phase_s.items())) if per_sensor else phase_s
+    )
+    key = (wf.structural_signature, t0, t1, phase_key)
     cached = _UNROLL_CACHE.get(key)
     if cached is not None:
         _UNROLL_CACHE.move_to_end(key)
@@ -393,7 +407,8 @@ def unroll_hyperperiod(
         task = wf.tasks[name]
         if isinstance(task, SensorTask):
             period = task.period_s
-            first = t0 + (phase_s % period if phase_s else 0.0)
+            ph = phase_s.get(name, 0.0) if per_sensor else phase_s
+            first = t0 + (ph % period if ph else 0.0)
             n = max(0, int(math.ceil((t1 - first) / period - 1e-9)))
             releases[name] = [
                 r for r in (first + i * period for i in range(n))

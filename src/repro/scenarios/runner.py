@@ -29,6 +29,7 @@ from ..core.runtime import (
 )
 from ..core.sim import SimConfig, Simulator, SimReport
 from ..core.sim.trace import Trace, build_skeleton, sample_trace
+from ..obs import TraceRecorder, attribution_report
 from .modes import get_mode, register_mode
 from .script import MarkovScenarioGenerator, ScenarioScript, default_generator
 
@@ -91,6 +92,12 @@ class ScenarioSpec(ExperimentSpec):
     #: added via register_mode must travel with the spec; sweep() fills
     #: this automatically from the generator's mode set.
     mode_defs: Optional[Dict[str, object]] = None
+    #: attach a flight recorder (:mod:`repro.obs`) to the run: the
+    #: report gains a ``attribution`` section (deadline-miss
+    #: decomposition) and the recorder itself is reachable through
+    #: ``run_scenario``'s ``recorder=`` argument for trace export.
+    #: Off by default — recording a sweep costs memory per run.
+    record: bool = False
 
     def __post_init__(self) -> None:
         if self.scenario is None:
@@ -136,11 +143,20 @@ def build_trace(spec: ScenarioSpec) -> Trace:
     return sample_trace(skel, model, scen, spec.seed)
 
 
-def run_scenario(spec: ScenarioSpec, trace: Optional[Trace] = None) -> SimReport:
+def run_scenario(
+    spec: ScenarioSpec,
+    trace: Optional[Trace] = None,
+    recorder: Optional[TraceRecorder] = None,
+) -> SimReport:
     """Run one scenario end-to-end and return its :class:`SimReport`.
 
     ``trace`` optionally injects presampled randomness (see
     :func:`build_trace`); ``None`` samples inside the engine.
+
+    ``recorder`` attaches a caller-owned flight recorder (so the caller
+    can export the trace afterwards); ``spec.record`` makes the runner
+    create an internal one.  Either way the report's ``attribution``
+    field is filled with the run's deadline-miss decomposition.
     """
     if spec.mode_defs:
         # idempotent in the parent; in a spawn worker this restores
@@ -182,6 +198,9 @@ def run_scenario(spec: ScenarioSpec, trace: Optional[Trace] = None) -> SimReport
                 kw["confidence_hi"] = 2.0
             policy.replanner = PredictiveReplanner(portfolio, **kw)
 
+    rec = recorder
+    if rec is None and spec.record:
+        rec = TraceRecorder()
     sim = Simulator(
         wf, model, sched, policy,
         SimConfig(
@@ -192,9 +211,13 @@ def run_scenario(spec: ScenarioSpec, trace: Optional[Trace] = None) -> SimReport
             drop_policy=spec.drop_policy,
             scenario=scen,
             trace=trace,
+            recorder=rec,
         ),
     )
-    return sim.run()
+    report = sim.run()
+    if rec is not None:
+        report.attribution = attribution_report(sim, rec)
+    return report
 
 
 # ---------------------------------------------------------------------------
@@ -258,6 +281,8 @@ def summarize(spec: ScenarioSpec, report: SimReport) -> Dict[str, object]:
         "tiles_used": report.tiles_used,
         "tiles_reserved_mean": report.tiles_reserved_mean,
         "target_miss": spec.target_miss,
+        # deadline-miss decomposition (recorded runs only, else None)
+        "attribution": report.attribution,
         "per_mode": {
             m: {
                 "span_s": s.span_s,
@@ -341,7 +366,11 @@ def aggregate_sweep(
     """Aggregate sweep rows into per-policy means (and per-mode means).
 
     Returns ``{policy: {n, violation_rate, task_miss_rate,
-    realloc_frac, per_mode: {mode: {...}}}}``.
+    realloc_frac, per_mode: {mode: {...}}}}``.  Rows from recorded runs
+    (``ScenarioSpec(record=True)``) additionally aggregate online into
+    an ``attribution`` entry: summed lateness decomposed into
+    queueing / realloc-stall / re-stagger / duration-tail seconds, so a
+    sweep can print *why* a policy misses, not just how often.
     """
     out: Dict[str, Dict[str, object]] = {}
     by_pol: Dict[str, List[Mapping[str, object]]] = {}
@@ -370,4 +399,20 @@ def aggregate_sweep(
                 for m, b in sorted(per_mode.items())
             },
         }
+        # online miss-attribution aggregation over recorded rows
+        att_rows = [a for r in rs if (a := r.get("attribution")) is not None]
+        if att_rows:
+            comp = {"queueing": 0.0, "realloc_stall": 0.0,
+                    "restagger": 0.0, "duration_tail": 0.0}
+            for a in att_rows:
+                for k in comp:
+                    comp[k] += float(a["components_s"][k])
+            out[pol]["attribution"] = {
+                "n_recorded": len(att_rows),
+                "n_late": sum(int(a["n_late"]) for a in att_rows),
+                "n_dropped": sum(int(a["n_dropped"]) for a in att_rows),
+                "n_degraded": sum(int(a["n_degraded"]) for a in att_rows),
+                "lateness_s": sum(float(a["lateness_s"]) for a in att_rows),
+                "components_s": comp,
+            }
     return out

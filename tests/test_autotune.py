@@ -18,6 +18,7 @@ from repro.core.runtime import (
 )
 from repro.core.runtime.autotune import clear_frontier_cache
 from repro.core.sim import SimConfig, Simulator
+from repro.obs import metrics
 from repro.scenarios import ScenarioSpec, get_mode, get_scenario
 from repro.scenarios.runner import build_trace, compile_portfolio, run_scenario
 
@@ -295,3 +296,80 @@ def test_target_miss_threads_through_scenario_spec():
     r = run_scenario(spec)
     assert r.tiles_used <= max(p.tiles for p in pf.selected.values())
     assert np.isfinite(r.tiles_reserved_mean)
+
+
+# ---------------------------------------------------------------------------
+# Phase II warm start
+# ---------------------------------------------------------------------------
+def test_budget_recompiles_warm_start_phase2():
+    """Budget-shrunk cells seed Phase II from the full-budget compile's
+    partitioning; full-budget compiles stay cold (ladder equivalence)."""
+    model, wf, compiler = _mode_stack("urban")
+    clear_frontier_cache()
+    metrics.reset()
+    metrics.enable()
+    try:
+        fr = autotune_mode(
+            model,
+            wf,
+            compiler,
+            q_grid=Q_LADDER,
+            budget_fracs=(0.85, 0.7),
+            mode_name="urban",
+        )
+        snap = metrics.snapshot()
+    finally:
+        metrics.enable(False)
+        metrics.reset()
+    counters = snap["counters"]
+    assert counters.get("phase2_warm_start", 0) > 0
+    # every full-budget cell compiled cold
+    full_cells = {
+        (p.q, p.num_partitions) for p in fr.points if p.budget == model.hw.num_tiles
+    }
+    assert counters.get("phase2_cold_start", 0) >= len(full_cells)
+    assert "autotune_search" in snap["phases"]
+
+
+def test_warm_started_frontier_matches_cold_validity():
+    """A warm-started search still produces a valid, deterministic
+    frontier: every point's schedule validates and reruns reproduce the
+    same keys (warm start is itself deterministic)."""
+    m1, w1, c1 = _mode_stack("urban")
+    clear_frontier_cache()
+    fr1 = autotune_mode(m1, w1, c1, q_grid=Q_LADDER, mode_name="urban")
+    for p in fr1.points:
+        p.schedule.validate()
+    clear_frontier_cache()
+    m2, w2, c2 = _mode_stack("urban")
+    fr2 = autotune_mode(m2, w2, c2, q_grid=Q_LADDER, mode_name="urban")
+    assert [p.key() for p in fr1.points] == [p.key() for p in fr2.points]
+
+
+def test_run_phase2_warm_start_fallback():
+    """Invalid warm assignments (wrong task set or group count) fall
+    back to the cold construction and reproduce its result exactly."""
+    from repro.core.gha.phase1 import run_phase1
+    from repro.core.gha.phase2 import run_phase2
+
+    model, wf, compiler = _mode_stack("urban")
+    p1 = run_phase1(model, wf, compiler.q, tile_cap=model.hw.num_tiles)
+    n_parts = max(1, min(compiler.num_partitions, len(wf.dnn_tasks)))
+    cold = run_phase2(wf, p1, n_parts, compiler.phase2_weights)
+    # wrong task set: missing one task
+    bad1 = dict(cold.assignment)
+    bad1.pop(next(iter(bad1)))
+    # wrong group count: everything in one bin (n_parts > 1 here)
+    bad2 = {t: 0 for t in cold.assignment}
+    assert n_parts > 1
+    for bad in (bad1, bad2):
+        again = run_phase2(wf, p1, n_parts, compiler.phase2_weights, warm_start=bad)
+        assert again.assignment == cold.assignment
+        assert again.capacities == cold.capacities
+    # a valid warm start (the cold fixed point itself) is stable
+    warm = run_phase2(
+        wf, p1, n_parts, compiler.phase2_weights, warm_start=cold.assignment
+    )
+    assert set(warm.assignment) == set(cold.assignment)
+    assert warm.num_partitions == cold.num_partitions
+    assert warm.score <= cold.score + 1e-9

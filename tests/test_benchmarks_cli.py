@@ -31,6 +31,17 @@ def test_run_out_creates_missing_parent_dirs(tmp_path, monkeypatch):
     ]
 
 
+def test_run_trace_out_writes_perfetto_json(tmp_path, monkeypatch):
+    out = tmp_path / "trace.json"
+    monkeypatch.setattr(
+        "sys.argv", ["run.py", "--only", "none", "--trace-out", str(out)]
+    )
+    bench_run.main()
+    data = json.loads(out.read_text())
+    assert data["displayTimeUnit"] == "ms"
+    assert len(data["traceEvents"]) > 0
+
+
 def test_rows_from_csv_skips_headers_and_junk():
     text = (
         "name,us_per_call,derived\n"

@@ -165,6 +165,62 @@ def test_non_integer_rate_seam_no_double_or_lost_jobs(cam24_mode):
     )
 
 
+def test_rate_seam_preserves_unmodulated_sensor_phase(cam24_mode):
+    """Only the *modulated* sensor re-anchors at a rate seam: a seam at
+    0.45 s is off-grid for the 10 Hz lidar, whose hardware timer nothing
+    restarted — its releases must stay on the k * 0.1 grid across the
+    seam instead of snapping to 0.45 + k * 0.1."""
+    script = ScenarioScript.parse("urban:0.45 cam24:0.55")
+    sim = _build_sim(script)
+    # the final full cycle may overshoot the horizon (the engine skips
+    # those events); only releases inside it are the seam's business
+    lidar = sorted(j.release for j in sim.jobs
+                   if j.task == "lidar" and j.release < 1.0 - 1e-9)
+    # continuous 10 Hz cadence over the whole second, no seam artifact
+    assert len(lidar) == 10
+    assert np.allclose(lidar, np.arange(10) * 0.1, atol=1e-9)
+    # the modulated camera does re-anchor: k/30 in [0, 0.45), then
+    # 0.45 + k/24 in [0.45, 1.0)
+    cam = sorted(j.release for j in sim.jobs
+                 if j.task == "cam_multi" and j.release < 1.0 - 1e-9)
+    assert len(cam) == 14 + 14
+    assert np.allclose(np.diff(cam[:14]), 1.0 / 30.0)
+    assert np.isclose(cam[14], 0.45)
+    assert np.allclose(np.diff(cam[14:]), 1.0 / 24.0)
+    # no duplicated or lost releases on either grid
+    assert min(np.diff(cam)) > 1e-9
+    # and the run still completes with reconciling accounting
+    r = sim.run()
+    assert r.n_mode_switches == 1
+    assert (
+        sum(s.n_completed for s in r.mode_stats.values())
+        == sum(r.chain_count.values())
+    )
+
+
+def test_on_grid_seam_unrolls_identically_to_legacy_phase0():
+    """Every bundled scenario's seams land on multiples of the
+    unmodulated sensor periods; the phase map must then collapse to the
+    legacy scalar 0.0 (same unroll-cache key, bit-identical releases)."""
+    from repro.core.sim.trace import build_skeleton, clear_skeleton_cache
+
+    wf = make_ads_benchmark()
+    scen = get_scenario("rate_churn")
+    clear_skeleton_cache()
+    skel = build_skeleton(wf, scen, scen.duration_s)
+    # unmodulated sensors stay on their own grid AND that grid equals
+    # the seam-anchored one (the seams are on-grid), so both readings
+    # of the releases agree
+    rel = {}
+    for jid, t in enumerate(skel.tasks):
+        if skel.is_sensor[jid]:
+            rel.setdefault(t, []).append(skel.release_list[jid])
+    lidar = np.sort(rel["lidar"])
+    assert np.allclose(lidar, np.arange(len(lidar)) * 0.1, atol=1e-9)
+    imu = np.sort(rel["imu"])
+    assert np.allclose(np.diff(imu), 1.0 / 240.0, atol=1e-9)
+
+
 def test_horizon_shorter_than_script_builds_no_future_regimes():
     # a 0.2 s run over a 2.0 s script must not materialise jobs for
     # regimes (or cycles) beyond the horizon
