@@ -1,0 +1,180 @@
+"""CI equivalence gate: batched lockstep engine vs the scalar engine.
+
+Usage::
+
+    python -m benchmarks.check_equivalence \
+        [--seeds 0 7 123] [--policies cyc tp_driven ads_tile] \
+        [--scenarios all] [--min-speedup 1.1]
+
+For every bundled scenario x policy x pinned seed, the same run is
+executed twice — once through :func:`repro.scenarios.runner.run_scenario`
+(the scalar reference engine) and once through
+:func:`~repro.scenarios.runner.run_scenario_batch` (the lockstep batch
+engine, all seeds of a cell in one batch) — and the two
+:class:`~repro.core.sim.engine.SimReport` objects are compared through
+:func:`repro.core.sim.batch.report_digest`.  The digest covers every
+float in the report (latencies, violations, utilization, per-mode
+tails), so a pass means **bit-identical** results, not "close enough":
+any divergence in event ordering, rate arithmetic, or policy decisions
+inside the fused lanes shows up here.
+
+``--min-speedup`` additionally times one warm pinned batch (the
+``perf_bench`` 6-mode Markov scenario, B=8, ads_tile) against the same
+seeds through the scalar loop and fails when the batched path does not
+clear the floor.  The floor is deliberately conservative (default
+1.1x): shared CI runners are noisy and single-core, and the honest
+fused-lane speedup envelope is documented in
+``docs/performance.md#batched-monte-carlo-engine`` — this assertion
+exists to catch the batched path silently degrading into
+"scalar-with-overhead", not to certify a marketing number.
+
+A pass/fail table is written to ``$GITHUB_STEP_SUMMARY`` when that
+environment variable is set (the GitHub Actions job-summary panel) and
+always printed to stdout.  Exit 1 on any mismatch or a missed speedup
+floor, 0 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+from typing import List, Sequence
+
+from repro.core.sim.batch import report_digest
+from repro.scenarios.runner import (
+    ScenarioSpec,
+    run_scenario,
+    run_scenario_batch,
+)
+from repro.scenarios.script import (
+    BUNDLED_SCENARIOS,
+    MarkovScenarioGenerator,
+    get_scenario,
+)
+
+DEFAULT_SEEDS = (0, 7, 123)
+DEFAULT_POLICIES = ("cyc", "tp_driven", "ads_tile")
+
+
+def run_cell(scenario: str, policy: str, seeds: Sequence[int]) -> List[bool]:
+    """Per-seed bit-identity verdicts for one scenario x policy cell."""
+    spec = ScenarioSpec(scenario=get_scenario(scenario), policy=policy)
+    batched = run_scenario_batch(spec, list(seeds))
+    out = []
+    for s, rb in zip(seeds, batched):
+        rs = run_scenario(dataclasses.replace(spec, seed=int(s)))
+        out.append(report_digest(rs) == report_digest(rb))
+    return out
+
+
+def measure_speedup(seeds: Sequence[int]) -> tuple:
+    """``(scalar_s, batch_s)`` for the pinned perf-bench scenario."""
+    from .perf_bench import PERF_DWELL, PERF_TRANSITIONS
+
+    gen = MarkovScenarioGenerator(transitions=PERF_TRANSITIONS, mean_dwell_s=PERF_DWELL)
+    spec = ScenarioSpec(scenario=gen.sample(2.0, 1), policy="ads_tile")
+    run_scenario_batch(spec, list(seeds)[:2])  # warm caches for both paths
+    run_scenario(dataclasses.replace(spec, seed=int(seeds[0])))
+    t0 = time.perf_counter()
+    for s in seeds:
+        run_scenario(dataclasses.replace(spec, seed=int(s)))
+    scalar_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_scenario_batch(spec, list(seeds))
+    batch_s = time.perf_counter() - t0
+    return scalar_s, batch_s
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--seeds",
+        type=int,
+        nargs="+",
+        default=list(DEFAULT_SEEDS),
+        help="pinned seeds per cell (default: 0 7 123)",
+    )
+    ap.add_argument(
+        "--policies",
+        nargs="+",
+        default=list(DEFAULT_POLICIES),
+        help="policies to sweep (default: all three)",
+    )
+    ap.add_argument(
+        "--scenarios",
+        nargs="+",
+        default=["all"],
+        help="bundled scenario names, or 'all'",
+    )
+    ap.add_argument(
+        "--min-speedup",
+        type=float,
+        default=None,
+        help="also assert batched/scalar wall-clock speedup "
+        "on the pinned B=8 perf scenario (ads_tile)",
+    )
+    args = ap.parse_args(argv)
+
+    scenarios = (
+        sorted(BUNDLED_SCENARIOS) if args.scenarios == ["all"] else args.scenarios
+    )
+
+    seed_cols = " | ".join(f"seed {s}" for s in args.seeds)
+    lines = [
+        f"| scenario | policy | {seed_cols} |",
+        "|---|---|" + "---|" * len(args.seeds),
+    ]
+    fails = 0
+    for scen in scenarios:
+        for pol in args.policies:
+            verdicts = run_cell(scen, pol, args.seeds)
+            fails += verdicts.count(False)
+            cells = " | ".join("OK" if v else "**FAIL**" for v in verdicts)
+            lines.append(f"| {scen} | {pol} | {cells} |")
+
+    total = len(scenarios) * len(args.policies) * len(args.seeds)
+    lines.append("")
+    lines.append(f"**{total - fails}/{total}** scalar-vs-batched runs bit-identical")
+
+    speed_ok = True
+    if args.min_speedup is not None:
+        scalar_s, batch_s = measure_speedup([1 + i for i in range(8)])
+        speedup = scalar_s / batch_s
+        speed_ok = speedup >= args.min_speedup
+        verdict = "OK" if speed_ok else "**FAIL**"
+        lines.append("")
+        lines.append(
+            f"Pinned B=8 ads_tile sweep: scalar {scalar_s:.3f}s, "
+            f"batched {batch_s:.3f}s — **{speedup:.2f}x** "
+            f"(floor {args.min_speedup:.2f}x) {verdict}"
+        )
+
+    table = "\n".join(lines)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as fh:
+            fh.write("## Batched-engine equivalence gate\n\n")
+            fh.write(table + "\n")
+
+    if fails:
+        print(
+            f"equivalence gate failed: {fails} run(s) diverged from the "
+            "scalar engine",
+            file=sys.stderr,
+        )
+        return 1
+    if not speed_ok:
+        print(
+            "equivalence gate failed: batched sweep below the speedup "
+            "floor (see docs/performance.md#batched-monte-carlo-engine)",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

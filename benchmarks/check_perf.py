@@ -41,6 +41,26 @@ def load_metric(path: Path, metric: str) -> dict:
     raise KeyError(f"{path}: no row named {metric!r}")
 
 
+def new_rows(baseline: Path, fresh: Path) -> list:
+    """Row names present in ``fresh`` but absent from ``baseline``.
+
+    A PR that adds a benchmark row without refreshing the committed
+    baseline leaves the new row un-gated — the next regression in it
+    would sail through CI.  That is worth a loud warning but not a
+    failure: the refresh procedure needs a quiet reference machine
+    (docs/performance.md#refreshing-the-baseline), so the row may land
+    one PR before its baseline does.
+    """
+    names = {
+        row.get("name") for row in json.loads(baseline.read_text()).get("rows", [])
+    }
+    return [
+        row.get("name")
+        for row in json.loads(fresh.read_text()).get("rows", [])
+        if row.get("name") not in names
+    ]
+
+
 def check(
     baseline: Path,
     fresh: Path,
@@ -60,16 +80,29 @@ def check(
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("baseline", type=Path,
-                    help="committed reference (BENCH_sim.json)")
-    ap.add_argument("fresh", type=Path,
-                    help="freshly measured perf-smoke artifact")
-    ap.add_argument("--metric", default=DEFAULT_METRIC,
-                    help=f"row to compare (default {DEFAULT_METRIC})")
-    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
-                    help="fail when fresh/baseline exceeds this "
-                         f"(default {DEFAULT_THRESHOLD})")
+    ap.add_argument("baseline", type=Path, help="committed reference (BENCH_sim.json)")
+    ap.add_argument("fresh", type=Path, help="freshly measured perf-smoke artifact")
+    ap.add_argument(
+        "--metric",
+        default=DEFAULT_METRIC,
+        help=f"row to compare (default {DEFAULT_METRIC})",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=DEFAULT_THRESHOLD,
+        help=f"fail when fresh/baseline exceeds this (default {DEFAULT_THRESHOLD})",
+    )
     args = ap.parse_args(argv)
+
+    for name in new_rows(args.baseline, args.fresh):
+        print(
+            f"WARNING: row {name!r} is measured fresh but absent from "
+            f"{args.baseline} — it is not perf-gated until the committed "
+            "baseline is refreshed "
+            "(docs/performance.md#refreshing-the-baseline)",
+            file=sys.stderr,
+        )
 
     ratio, ok = check(args.baseline, args.fresh, args.metric, args.threshold)
     verdict = "OK" if ok else "REGRESSION"

@@ -101,6 +101,13 @@ class Job:
     #: (candidate tuple, durations tuple) memo for the policies'
     #: candidate-ladder walks; see :meth:`duration_ladder`
     _ladder: Optional[tuple] = dataclasses.field(default=None, repr=False)
+    #: ``(gen, target - projected_finish)`` memo for at-risk scans,
+    #: with the finish projection anchored at ``last_t`` (``last_t +
+    #: (1-progress)/rate``): for a job running steadily at one DoP the
+    #: projection is constant, so the slack against its deadline target
+    #: is too — one float per rate epoch (``gen`` changes whenever
+    #: rate/DoP do).  Used by the batched fast lanes.
+    _margin: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
     def duration(self, c: int, tile_flops: float) -> float:
         if self.is_sensor:
@@ -564,7 +571,7 @@ class Simulator:
             f"{job.task}: dop {dop} > free {part.free()} in partition {part.idx}"
         )
         self._touch(part)
-        self._ready_sets[job.partition].discard(job)
+        self._ready_sets[job.partition].pop(job, None)
         job.state = JobState.RUNNING
         job.start_t = self.now
         job.dop = dop
@@ -661,7 +668,7 @@ class Simulator:
                 part.alloc -= part.running.pop(jid)
                 job.dop = 0
                 job.state = JobState.READY
-                self._ready_sets[partition].add(job)
+                self._ready_sets[partition][job] = None
                 shrunk = True
             else:
                 shrunk = shrunk or d < old
@@ -879,7 +886,7 @@ class Simulator:
                     job.dop = 0
                     job.n_resizes += 1
                     job.state = JobState.READY
-                    self._ready_sets[part.idx].add(job)
+                    self._ready_sets[part.idx][job] = None
             part.capacity = new_cap
             stall = self.hw.realloc_latency(moved, max(new_cap, 1))
             # freeze whatever keeps running for the swap stall (§IV-D1)
@@ -918,8 +925,8 @@ class Simulator:
             if plan is None:
                 continue
             if job.state == JobState.READY and plan.partition != job.partition:
-                self._ready_sets[job.partition].discard(job)
-                self._ready_sets[plan.partition].add(job)
+                self._ready_sets[job.partition].pop(job, None)
+                self._ready_sets[plan.partition][job] = None
             job.partition = plan.partition
             ert = job.release + plan.ert_s
             period = restagger.get(job.task)
@@ -962,7 +969,7 @@ class Simulator:
         freed = part.running.pop(job.jid)
         part.alloc -= freed
         job.state = JobState.READY
-        self._ready_sets[job.partition].add(job)
+        self._ready_sets[job.partition][job] = None
         if self._rec is not None:
             self._rec.emit(
                 self.now, "job_preempt", jid=job.jid, task=job.task,
@@ -981,7 +988,7 @@ class Simulator:
             part.alloc -= freed
             self._notify_drain()
         elif job.state == JobState.READY:
-            self._ready_sets[job.partition].discard(job)
+            self._ready_sets[job.partition].pop(job, None)
         if self._rec is not None:
             self._rec.emit(
                 self.now, "job_drop", jid=job.jid, task=job.task,
@@ -1051,7 +1058,7 @@ class Simulator:
                 succ.ready_t = self.now
                 if succ.is_sensor:
                     continue
-                self._ready_sets[succ.partition].add(succ)
+                self._ready_sets[succ.partition][succ] = None
                 if self._rec is not None:
                     self._rec.emit(
                         self.now, "job_ready", jid=succ.jid, task=succ.task,
@@ -1142,7 +1149,23 @@ class Simulator:
             return self._run()
 
     def _run(self) -> SimReport:
-        self._ready_sets: List[set] = [set() for _ in self.parts]
+        self._prime()
+        step = self._step
+        while step():
+            pass
+        return self._finalize()
+
+    # The loop is split into pure step functions so an external driver
+    # (the batched lockstep engine in batch.py) can interleave many
+    # simulators event-by-event: _prime() once, then _step() until it
+    # returns False (heap drained or horizon crossed), then _finalize().
+    def _prime(self) -> None:
+        # insertion-ordered ready sets: Job hashes by identity, so a
+        # plain set iterates in address order, which is only
+        # accidentally stable. Dict keys preserve insertion order and
+        # make tie-breaking in policy sorts reproducible across
+        # processes (and mirrorable by the batched engine).
+        self._ready_sets: List[Dict[Job, None]] = [{} for _ in self.parts]
         self.policy.setup(self)
 
         rec = self._rec
@@ -1183,108 +1206,139 @@ class Simulator:
             if rep is not None and hasattr(rep, "on_run_start"):
                 rep.on_run_start(self, self._mode_now, 0.0)
 
-        end_t = self.cfg.duration_s
-        while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
-            if t > end_t:
-                break
-            self.now = t
+    def _step(self) -> bool:
+        """Pop and dispatch one event. Returns False when drained."""
+        heap = self._heap
+        if not heap:
+            return False
+        t, _, kind, payload = heapq.heappop(heap)
+        if t > self.cfg.duration_s:
+            return False
+        self.now = t
+        self._dispatch(kind, payload)
+        return True
 
-            if kind == "sensor":
-                job = self.jobs[payload[0]]
-                if job.drop_at_release:
-                    # scenario dropout: the frame never arrives;
-                    # downstream jobs run degraded
-                    self.terminate(job, "sensor_dropout")
-                    continue
-                job.state = JobState.RUNNING
-                job.start_t = self.now
-                if rec is not None:
-                    rec.emit(
-                        self.now, "job_release", jid=job.jid, task=job.task,
-                    )
-                self._push(self.now + job.io_s, "sensor_done", (job.jid,))
-            elif kind == "sensor_done":
-                self._finish_job(self.jobs[payload[0]])
-            elif kind == "ready":
-                job = self.jobs[payload[0]]
-                if job.state == JobState.READY:
-                    self.policy.on_point(self, job.partition, self.now, "ready", job)
-            elif kind == "ert":
-                job = self.jobs[payload[0]]
-                if job.state == JobState.READY:
-                    self.policy.on_point(self, job.partition, self.now, "ert", job)
-            elif kind == "finish":
-                jid, gen = payload
+    def _dispatch(self, kind: str, payload: tuple) -> None:
+        rec = self._rec
+        if kind == "sensor":
+            job = self.jobs[payload[0]]
+            if job.drop_at_release:
+                # scenario dropout: the frame never arrives;
+                # downstream jobs run degraded
+                self.terminate(job, "sensor_dropout")
+                return
+            job.state = JobState.RUNNING
+            job.start_t = self.now
+            if rec is not None:
+                rec.emit(
+                    self.now, "job_release", jid=job.jid, task=job.task,
+                )
+            self._push(self.now + job.io_s, "sensor_done", (job.jid,))
+        elif kind == "sensor_done":
+            self._finish_job(self.jobs[payload[0]])
+        elif kind == "ready":
+            job = self.jobs[payload[0]]
+            if job.state == JobState.READY:
+                self.policy.on_point(self, job.partition, self.now, "ready", job)
+        elif kind == "ert":
+            job = self.jobs[payload[0]]
+            if job.state == JobState.READY:
+                self.policy.on_point(self, job.partition, self.now, "ert", job)
+        elif kind == "finish":
+            jid, gen = payload
+            job = self.jobs[jid]
+            if job.gen != gen or job.state != JobState.RUNNING:
+                return
+            self._advance_job(job)
+            self._finish_job(job)
+            if self._drain_watch is not None:
+                # drain-aware activation: allocation just dropped —
+                # let the replanner re-check before the policy
+                # refills the freed tiles under the old table
+                self.policy.on_forecast(self, self._drain_watch, self.now)
+            self.policy.on_point(self, job.partition, self.now, "finish", job)
+        elif kind == "chunk":
+            jid, gen = payload
+            job = self.jobs[jid]
+            if job.gen != gen or job.state != JobState.RUNNING:
+                return
+            self._advance_job(job)
+            # re-arm next chunk boundary (chunk events only exist
+            # for resizable jobs under chunk-using policies)
+            n = self.cfg.n_chunks
+            nxt = math.floor(job.progress * n + 1e-9) + 1
+            if nxt < n and job.rate > 0:
+                dt = (nxt / n - job.progress) / job.rate
+                self._push(self.now + dt, "chunk", (job.jid, job.gen))
+            self.policy.on_point(self, job.partition, self.now, "chunk", job)
+        elif kind == "resume":
+            part = self.parts[payload[0]]
+            if part.stall_end > self.now + 1e-12:
+                return  # superseded by a longer stall (hot-swap)
+            self._touch(part)
+            part.stalled = False
+            if rec is not None:
+                rec.emit(self.now, "stall_end", partition=part.idx)
+                rec.stall_end(part.idx, self.now)
+            for jid in list(part.running):
                 job = self.jobs[jid]
-                if job.gen != gen or job.state != JobState.RUNNING:
-                    continue
                 self._advance_job(job)
-                self._finish_job(job)
-                if self._drain_watch is not None:
-                    # drain-aware activation: allocation just dropped —
-                    # let the replanner re-check before the policy
-                    # refills the freed tiles under the old table
-                    self.policy.on_forecast(self, self._drain_watch, self.now)
-                self.policy.on_point(self, job.partition, self.now, "finish", job)
-            elif kind == "chunk":
-                jid, gen = payload
-                job = self.jobs[jid]
-                if job.gen != gen or job.state != JobState.RUNNING:
-                    continue
-                self._advance_job(job)
-                # re-arm next chunk boundary (chunk events only exist
-                # for resizable jobs under chunk-using policies)
-                n = self.cfg.n_chunks
-                nxt = math.floor(job.progress * n + 1e-9) + 1
-                if nxt < n and job.rate > 0:
-                    dt = (nxt / n - job.progress) / job.rate
-                    self._push(self.now + dt, "chunk", (job.jid, job.gen))
-                self.policy.on_point(self, job.partition, self.now, "chunk", job)
-            elif kind == "resume":
-                part = self.parts[payload[0]]
-                if part.stall_end > t + 1e-12:
-                    continue  # superseded by a longer stall (hot-swap)
+                self._set_rate(job)
+            self.policy.on_point(self, part.idx, self.now, "resume", None)
+        elif kind == "timer":
+            pid, jid = payload
+            job = self.jobs[jid] if jid >= 0 else None
+            if job is not None and job.state in (JobState.DONE, JobState.DROPPED):
+                return
+            self.policy.on_point(self, pid, self.now, "timer", job)
+        elif kind == "forecast":
+            if rec is not None:
+                rec.emit(self.now, "forecast_fire")
+            self.policy.on_forecast(self, payload[0], self.now)
+        elif kind == "mode_change":
+            mode = payload[0]
+            # split tile-second accounting exactly at the boundary
+            for part in self.parts:
                 self._touch(part)
-                part.stalled = False
-                if rec is not None:
-                    rec.emit(self.now, "stall_end", partition=part.idx)
-                    rec.stall_end(part.idx, self.now)
-                for jid in list(part.running):
-                    job = self.jobs[jid]
-                    self._advance_job(job)
-                    self._set_rate(job)
-                self.policy.on_point(self, part.idx, self.now, "resume", None)
-            elif kind == "timer":
-                pid, jid = payload
-                job = self.jobs[jid] if jid >= 0 else None
-                if job is not None and job.state in (JobState.DONE, JobState.DROPPED):
-                    continue
-                self.policy.on_point(self, pid, self.now, "timer", job)
-            elif kind == "forecast":
-                if rec is not None:
-                    rec.emit(self.now, "forecast_fire")
-                self.policy.on_forecast(self, payload[0], self.now)
-            elif kind == "mode_change":
-                mode = payload[0]
-                # split tile-second accounting exactly at the boundary
-                for part in self.parts:
-                    self._touch(part)
-                self._mode_now = mode
-                self.n_mode_switches += 1
-                if rec is not None:
-                    rec.emit(self.now, "mode_change", info=mode)
-                self.policy.on_mode_change(self, mode, self.now)
+            self._mode_now = mode
+            self.n_mode_switches += 1
+            if rec is not None:
+                rec.emit(self.now, "mode_change", info=mode)
+            self.policy.on_mode_change(self, mode, self.now)
 
+    def _finalize(self) -> SimReport:
         # drain accounting to end time
+        end_t = self.cfg.duration_s
         self.now = end_t
         for part in self.parts:
             self._touch(part)
-        if rec is not None:
-            rec.finalize(end_t)
+        if self._rec is not None:
+            self._rec.finalize(end_t)
         return self._report()
 
     # ------------------------------------------------------------------
+    def _chain_expectations(self) -> Dict[str, tuple]:
+        """chain name -> (expected sink completions within the horizon,
+        per-mode expected counts).  A pure function of the skeleton's
+        sink map and the scenario timeline — trace- and
+        policy-independent, so the batched lockstep engine computes it
+        once per batch and injects it into every lane."""
+        scen = self.cfg.scenario
+        out: Dict[str, tuple] = {}
+        for chain in self.wf.chains:
+            expected = 0
+            exp_mode: Dict[str, int] = {}
+            for (cname, _jid), t0 in self._sink_src.items():
+                if cname != chain.name:
+                    continue
+                if t0 + chain.deadline_s <= self.cfg.duration_s:
+                    expected += 1
+                    if scen is not None:
+                        m = scen.mode_at(t0)
+                        exp_mode[m] = exp_mode.get(m, 0) + 1
+            out[chain.name] = (expected, exp_mode)
+        return out
+
     def _report(self) -> SimReport:
         total = self.hw.num_tiles * self.cfg.duration_s
         busy = sum(p.busy_ts for p in self.parts)
@@ -1311,17 +1365,9 @@ class Simulator:
         # chains whose sink never completed within the horizon count as
         # violations (starvation must not look like success)
         scen = self.cfg.scenario
+        expectations = self._chain_expectations()
         for chain in self.wf.chains:
-            expected = 0
-            exp_mode: Dict[str, int] = {}
-            for (cname, _jid), t0 in self._sink_src.items():
-                if cname != chain.name:
-                    continue
-                if t0 + chain.deadline_s <= self.cfg.duration_s:
-                    expected += 1
-                    if scen is not None:
-                        m = scen.mode_at(t0)
-                        exp_mode[m] = exp_mode.get(m, 0) + 1
+            expected, exp_mode = expectations[chain.name]
             have = self.chain_count[chain.name]
             deficit = max(0, expected - have)
             if deficit:

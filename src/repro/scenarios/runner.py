@@ -28,6 +28,7 @@ from ..core.runtime import (
     SchedulePortfolio,
 )
 from ..core.sim import SimConfig, Simulator, SimReport
+from ..core.sim.batch import LaneSimulator, run_batch, sample_trace_batch
 from ..core.sim.trace import Trace, build_skeleton, sample_trace
 from ..obs import TraceRecorder, attribution_report
 from .modes import get_mode, register_mode
@@ -38,6 +39,8 @@ __all__ = [
     "compile_portfolio",
     "build_trace",
     "run_scenario",
+    "run_scenario_batch",
+    "run_scenario_group",
     "parallel_map",
     "sweep",
     "aggregate_sweep",
@@ -158,6 +161,25 @@ def run_scenario(
     create an internal one.  Either way the report's ``attribution``
     field is filled with the run's deadline-miss decomposition.
     """
+    wf, model, sched, portfolio = _prepare_run(spec)
+    policy = _make_run_policy(spec, portfolio)
+    rec = recorder
+    if rec is None and spec.record:
+        rec = TraceRecorder()
+    sim = Simulator(
+        wf, model, sched, policy, _sim_config(spec, trace, rec),
+    )
+    report = sim.run()
+    if rec is not None:
+        report.attribution = attribution_report(sim, rec)
+    return report
+
+
+def _prepare_run(spec: ScenarioSpec):
+    """The per-run setup of :func:`run_scenario`: mode registration,
+    workload stack, and the offline schedule portfolio.  Shared with
+    the batched entry points so a batched lane is constructed exactly
+    like a scalar run."""
     if spec.mode_defs:
         # idempotent in the parent; in a spawn worker this restores
         # custom modes the fresh registry does not have
@@ -178,8 +200,15 @@ def run_scenario(
             model, wf, {m: get_mode(m) for m in wanted}, compiler,
             target_miss=spec.target_miss,
         )
-    sched = portfolio.schedules[initial_mode]
+    return wf, model, portfolio.schedules[initial_mode], portfolio
 
+
+def _make_run_policy(spec: ScenarioSpec, portfolio: SchedulePortfolio):
+    """Fresh policy (+ replanner) instance for one run/lane — replanner
+    state (swap counters, forecast bookkeeping) is per-run, so batched
+    lanes never share it; the compiled portfolio itself is read-only
+    and shared."""
+    scen = spec.scenario
     policy = make_policy(spec.policy)
     if spec.replan:
         if spec.replan_mode == "reactive":
@@ -197,27 +226,96 @@ def run_scenario(
                 # for a full pre-swap, every stage blends
                 kw["confidence_hi"] = 2.0
             policy.replanner = PredictiveReplanner(portfolio, **kw)
+    return policy
 
-    rec = recorder
-    if rec is None and spec.record:
-        rec = TraceRecorder()
-    sim = Simulator(
-        wf, model, sched, policy,
-        SimConfig(
-            duration_s=(
-                scen.duration_s if spec.duration_s is None else spec.duration_s
-            ),
-            seed=spec.seed,
-            drop_policy=spec.drop_policy,
-            scenario=scen,
-            trace=trace,
-            recorder=rec,
+
+def _sim_config(
+    spec: ScenarioSpec, trace: Optional[Trace], rec: Optional[TraceRecorder],
+) -> SimConfig:
+    scen = spec.scenario
+    return SimConfig(
+        duration_s=(
+            scen.duration_s if spec.duration_s is None else spec.duration_s
         ),
+        seed=spec.seed,
+        drop_policy=spec.drop_policy,
+        scenario=scen,
+        trace=trace,
+        recorder=rec,
     )
-    report = sim.run()
-    if rec is not None:
-        report.attribution = attribution_report(sim, rec)
-    return report
+
+
+def run_scenario_batch(
+    spec: ScenarioSpec,
+    seeds: Sequence[int],
+    recorders: Optional[Mapping[int, TraceRecorder]] = None,
+) -> List[SimReport]:
+    """Run ``len(seeds)`` Monte-Carlo drives of one spec through the
+    batched lockstep engine and return one report per seed.
+
+    Each lane's report is bit-identical to
+    ``run_scenario(replace(spec, seed=s))`` — the stack/portfolio setup
+    is shared, the stream-contract trace is batch-materialized once
+    (:func:`~repro.core.sim.batch.sample_trace_batch`) and the lanes
+    advance in lockstep (:func:`~repro.core.sim.batch.run_batch`).
+
+    ``recorders`` optionally attaches a flight recorder to individual
+    lanes by seed *index* — a recorded lane de-batches to the scalar
+    per-lane driver (recorder hooks live on the engine paths the fused
+    loop elides) but stays inside the lockstep loop, and its report
+    gains the usual ``attribution`` section.  ``spec.record`` attaches
+    one to every lane.
+    """
+    wf, model, sched, portfolio = _prepare_run(spec)
+    scen = spec.scenario
+    duration = scen.duration_s if spec.duration_s is None else spec.duration_s
+    skel = build_skeleton(wf, scen, duration)
+    btrace = sample_trace_batch(skel, model, scen, seeds)
+
+    sims: List[LaneSimulator] = []
+    recs: List[Optional[TraceRecorder]] = []
+    for k, s in enumerate(seeds):
+        rec = recorders.get(k) if recorders is not None else None
+        if rec is None and spec.record:
+            rec = TraceRecorder()
+        lane_spec = dataclasses.replace(spec, seed=int(s))
+        sims.append(LaneSimulator(
+            wf, model, sched, _make_run_policy(lane_spec, portfolio),
+            _sim_config(lane_spec, btrace.lane(k), rec),
+        ))
+        recs.append(rec)
+    reports = run_batch(sims)
+    for sim, rec, report in zip(sims, recs, reports):
+        if rec is not None:
+            report.attribution = attribution_report(sim, rec)
+    return reports
+
+
+def run_scenario_group(
+    specs: Sequence[ScenarioSpec], trace: Optional[Trace] = None,
+) -> List[SimReport]:
+    """Run one *group* — several specs sharing (scenario, seed,
+    workload), differing in policy/replan — as lanes of one lockstep
+    batch, sharing ``trace`` exactly like the scalar group runner.
+
+    Reports are bit-identical to ``run_scenario(spec, trace=trace)``
+    per spec; this is the batched path under :func:`sweep`.
+    """
+    sims: List[LaneSimulator] = []
+    recs: List[Optional[TraceRecorder]] = []
+    for spec in specs:
+        wf, model, sched, portfolio = _prepare_run(spec)
+        rec = TraceRecorder() if spec.record else None
+        sims.append(LaneSimulator(
+            wf, model, sched, _make_run_policy(spec, portfolio),
+            _sim_config(spec, trace, rec),
+        ))
+        recs.append(rec)
+    reports = run_batch(sims)
+    for sim, rec, report in zip(sims, recs, reports):
+        if rec is not None:
+            report.attribution = attribution_report(sim, rec)
+    return reports
 
 
 # ---------------------------------------------------------------------------
@@ -310,9 +408,17 @@ def _run_group(specs: Sequence[ScenarioSpec]) -> List[Dict[str, object]]:
     only in policy/replan, so one trace serves them all: the paired
     policy comparison stays exact at the job level while the sampling
     cost is paid once instead of once per policy.
+
+    Groups of several specs route through the batched lockstep engine
+    (:func:`run_scenario_group`) — per-lane reports are bit-identical
+    to the scalar path (the ``batch-equivalence`` CI gate pins this),
+    so sweep rows are unchanged.
     """
-    trace = build_trace(specs[0]) if len(specs) > 1 else None
-    return [summarize(s, run_scenario(s, trace=trace)) for s in specs]
+    if len(specs) <= 1:
+        return [summarize(s, run_scenario(s)) for s in specs]
+    trace = build_trace(specs[0])
+    reports = run_scenario_group(specs, trace=trace)
+    return [summarize(s, r) for s, r in zip(specs, reports)]
 
 
 def sweep(

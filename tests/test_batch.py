@@ -1,0 +1,129 @@
+"""Batched lockstep engine vs the scalar reference engine.
+
+The contract under test is bit-identity: every lane of
+``run_scenario_batch`` / ``run_scenario_group`` must produce a
+:class:`~repro.core.sim.engine.SimReport` exactly equal (via
+``report_digest``, every float verbatim) to the same run through the
+scalar ``run_scenario`` path.  The full bundled-scenario sweep runs in
+CI as its own gate (``benchmarks.check_equivalence``); here a fast
+subset pins the contract into tier-1, plus the de-batching edge cases
+(unsupported lane, attached recorder) and a property test over random
+scenarios/workloads.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.sim import batch as batch_mod
+from repro.core.sim.batch import reports_identical
+from repro.obs import TraceRecorder
+from repro.scenarios.runner import (
+    ScenarioSpec,
+    run_scenario,
+    run_scenario_batch,
+    run_scenario_group,
+)
+from repro.scenarios.script import MarkovScenarioGenerator, get_scenario
+
+SEEDS = [0, 7]
+
+
+def _scalar(spec: ScenarioSpec, seed: int):
+    return run_scenario(dataclasses.replace(spec, seed=int(seed)))
+
+
+def _spy_scalar_lanes(monkeypatch):
+    """Record every sim that de-batches to the scalar fallback lane."""
+    seen = []
+    orig = batch_mod._ScalarLane
+    monkeypatch.setattr(
+        batch_mod,
+        "_ScalarLane",
+        lambda sim: seen.append(sim) or orig(sim),
+    )
+    return seen
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["cyc", "tp_driven", "ads_tile"])
+@pytest.mark.parametrize("scenario", ["calm_to_rush", "rate_churn"])
+def test_batched_reports_bit_identical(scenario, policy):
+    spec = ScenarioSpec(scenario=get_scenario(scenario), policy=policy)
+    reports = run_scenario_batch(spec, SEEDS)
+    for s, rb in zip(SEEDS, reports):
+        assert reports_identical(_scalar(spec, s), rb), (scenario, policy, s)
+
+
+def test_divergent_lane_falls_back_to_scalar(monkeypatch):
+    # a predictive replanner is outside the fused cores' support set:
+    # its lane must de-batch to the scalar driver (and only its lane),
+    # while the whole batch stays bit-identical to per-run execution
+    scen = get_scenario("calm_to_rush")
+    specs = [
+        ScenarioSpec(scenario=scen, policy="ads_tile", seed=3),
+        ScenarioSpec(
+            scenario=scen, policy="ads_tile", seed=3, replan_mode="predictive"
+        ),
+    ]
+    seen = _spy_scalar_lanes(monkeypatch)
+    reports = run_scenario_group(specs)
+    assert len(seen) == 1
+    assert seen[0].cfg.seed == 3
+    assert not batch_mod.fast_lane_supported(seen[0])
+    for spec, rb in zip(specs, reports):
+        assert reports_identical(run_scenario(spec), rb)
+
+
+def test_recorder_lane_debatches(monkeypatch):
+    # recorder hooks live on engine paths the fused loop elides, so a
+    # recorded lane runs scalar inside the lockstep loop — without
+    # perturbing its own results or any other lane's
+    spec = ScenarioSpec(scenario=get_scenario("calm_to_rush"), policy="ads_tile")
+    seen = _spy_scalar_lanes(monkeypatch)
+    reports = run_scenario_batch(spec, SEEDS, recorders={1: TraceRecorder()})
+    assert [sim.cfg.recorder is not None for sim in seen] == [True]
+    assert reports[0].attribution is None
+    assert reports[1].attribution is not None
+    for s, rb in zip(SEEDS, reports):
+        assert reports_identical(_scalar(spec, s), rb)
+
+
+def test_mixed_skeleton_batch_rejected():
+    a = ScenarioSpec(scenario=get_scenario("calm_to_rush"), policy="cyc")
+    b = ScenarioSpec(scenario=get_scenario("commute"), policy="cyc")
+    with pytest.raises(ValueError, match="skeleton"):
+        run_scenario_group([a, b])
+
+
+# ---------------------------------------------------------------------------
+# property test: random scenarios/workloads, scalar-vs-batched equality.
+# Guarded import (not importorskip) so a missing hypothesis skips only
+# this test, never the pinned equivalence tests above.
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_random_scenarios_match_scalar():
+        pass
+else:
+    @given(
+        gen_seed=st.integers(0, 1_000),
+        run_seed=st.integers(0, 10_000),
+        duration=st.floats(0.3, 0.6),
+        policy=st.sampled_from(["cyc", "tp_driven", "ads_tile"]),
+        replicas=st.integers(1, 2),
+    )
+    @settings(
+        deadline=None,
+        max_examples=8,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    def test_property_random_scenarios_match_scalar(
+        gen_seed, run_seed, duration, policy, replicas
+    ):
+        scen = MarkovScenarioGenerator().sample(duration, gen_seed)
+        spec = ScenarioSpec(scenario=scen, policy=policy, cockpit_replicas=replicas)
+        seeds = [run_seed, run_seed + 1]
+        reports = run_scenario_batch(spec, seeds)
+        for s, rb in zip(seeds, reports):
+            assert reports_identical(_scalar(spec, s), rb), (gen_seed, policy, s)
