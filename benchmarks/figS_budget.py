@@ -73,6 +73,18 @@ COMMUTE_BURST_PROB = 0.5
 #: full-chip baseline meets deadlines and there is nothing to save
 COMMUTE_LOAD_FACTOR = 1.35
 
+#: part 3 sweeps the load factor itself to trace the full
+#: tiles-saved-vs-load curve (the paper's Fig. 13 analogue): from the
+#: light regime (nothing to save) through part 2's operating point
+#: into overload.  Cheap on the SoA backend — every grid point is an
+#: R-seed cell of one pinned drive, so the jit compile is paid once
+#: per policy shape and each point costs R kernel runs.
+LOAD_GRID = (1.0, 1.15, 1.35, 1.5)
+#: part 3's reduced autotuner walk per load point (the full
+#: TARGET_GRID transparency sweep is part 2's job; the curve needs
+#: the envelope: one relaxed point + the conservative fallback)
+LOAD_TARGETS = (0.35, None)
+
 
 def _portfolio_tiles(pf: SchedulePortfolio) -> int:
     """Tiles the portfolio provisions: the worst mode's reservation."""
@@ -249,4 +261,64 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
         f"mean_tiles_ads={mean_ads:.1f};mean_tiles_base={mean_base:.1f};"
         f"saved_frac={saved:.3f};viol_ads={viol_ads:.4f};"
         f"viol_base={viol_base:.4f};target={_tag(t_pick)}",
+    )
+
+    # -- part 3: tiles-saved-vs-load curve (Fig. 13 analogue) -----------
+    from repro.core.sim.soa import soa_available
+    from repro.scenarios.runner import run_scenario_batch, run_scenario_soa
+
+    script3 = gen.sample(2.0, seed=seed * 100003)  # one pinned bursty drive
+    seeds3 = list(range(seed, seed + n))
+    backend3 = "soa" if soa_available() else "lockstep"
+
+    def cell_stats(spec):
+        """(mean violation rate, mean reserved tiles) over the R-seed
+        cell — SoA lanes when jax is present, lockstep lanes otherwise
+        (the curve is a statistical statement either way)."""
+        if backend3 == "soa":
+            reports = run_scenario_soa(spec, seeds3)
+        else:
+            reports = run_scenario_batch(spec, seeds3)
+        return (
+            mean([r.violation_rate for r in reports]),
+            mean([r.tiles_reserved_mean for r in reports]),
+        )
+
+    curve = []
+    for lf in LOAD_GRID:
+        base3 = ScenarioSpec(
+            scenario=script3,
+            policy="tp_driven",
+            seed=seed,
+            mode_defs=mode_defs,
+            load_factor=lf,
+        )
+        pf_b = _compile(base3, all_modes, None)
+        viol_b, mean_b = cell_stats(dataclasses.replace(base3, portfolio=pf_b))
+        cands = []
+        for t in LOAD_TARGETS:
+            pf_t = _compile(dataclasses.replace(base3, policy="ads_tile"), all_modes, t)
+            v, m = cell_stats(
+                dataclasses.replace(
+                    base3, policy="ads_tile", portfolio=pf_t, target_miss=t
+                )
+            )
+            cands.append((m, v, t))
+        m_ads, v_ads, t_pick = _pick_cheapest(cands, viol_b)
+        saved = 1.0 - m_ads / mean_b
+        curve.append((lf, saved))
+        emit(
+            f"figS_budget_load_{int(round(lf * 100))}",
+            saved * 1e6,
+            f"load={lf};mean_tiles_ads={m_ads:.1f};"
+            f"mean_tiles_base={mean_b:.1f};saved_frac={saved:.3f};"
+            f"viol_ads={v_ads:.4f};viol_base={viol_b:.4f};"
+            f"target={_tag(t_pick)};n={n};backend={backend3}",
+        )
+    emit(
+        "figS_budget_load_curve",
+        max(s for _lf, s in curve) * 1e6,
+        "curve="
+        + ",".join(f"{lf:g}:{s:.3f}" for lf, s in curve)
+        + f";backend={backend3}",
     )

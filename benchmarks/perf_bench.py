@@ -21,6 +21,11 @@ visible in CI artifacts (``BENCH_sim.json`` via ``benchmarks.run
    seeds through a warm scalar loop (``perf_batch_*``; bit-identity
    between the two paths is asserted separately by
    ``benchmarks.check_equivalence``).
+5. **SoA jax backend** — the same pinned scenario through
+   ``run_scenario_soa`` at R=8 and R=64 (``perf_soa_*_r{8,64}``),
+   steady-state per-run wall-clock with the jit compile reported
+   separately (``check_equivalence --mode distributional`` asserts
+   the statistical-equivalence side).
 
 ``PREPR_*`` constants are the pre-PR numbers measured on the reference
 dev container when this benchmark was introduced (engine @ b7c00aa:
@@ -201,6 +206,12 @@ def _sweep_benchmark(duration: float, seed: int) -> None:
     emit("perf_sweep_e2e", dt / max(len(rows), 1) * 1e6, derived)
 
 
+#: lockstep per-run wall-clock measured by ``_batch_benchmark`` this
+#: process, keyed by policy — lets ``_soa_benchmark`` derive a
+#: same-machine, same-run speedup without re-measuring the baseline
+_BATCH_US_PER_RUN: dict = {}
+
+
 def _batch_benchmark(duration: float, seed: int) -> None:
     """Batched lockstep engine vs a warm scalar loop: one pinned Markov
     scenario (same 6-mode generator as ``perf_sweep_e2e``), B seeds per
@@ -230,6 +241,7 @@ def _batch_benchmark(duration: float, seed: int) -> None:
         t0 = time.perf_counter()
         run_scenario_batch(spec, seeds)
         dt_batch = time.perf_counter() - t0
+        _BATCH_US_PER_RUN[pol] = dt_batch / b * 1e6
         emit(
             name,
             dt_batch / b * 1e6,
@@ -238,8 +250,55 @@ def _batch_benchmark(duration: float, seed: int) -> None:
         )
 
 
+def _soa_benchmark(duration: float, seed: int) -> None:
+    """Structure-of-arrays jax backend on the same pinned Markov
+    scenario: R-seed cells at R=8 and R=64 through
+    ``run_scenario_soa``.  Each cell is measured twice — the first call
+    pays the jit compile for that (policy, R) shape, the second is the
+    steady state — and ``us_per_call`` reports the *steady* per-run
+    wall-clock (the regression-gated number) with the compile cost in
+    the derived fields, per the warm-up-excluded convention.
+    ``speedup_vs_lockstep`` compares against ``_batch_benchmark``'s
+    same-process lockstep per-run time; see
+    docs/performance.md#soa-backend for why the single-core envelope
+    of this ratio is modest (the round kernel's op-dispatch cost does
+    not amortize with R on one core) and where the backend does win.
+    Skips (emitting nothing) when jax is unavailable."""
+    from repro.core.sim.soa import soa_available
+    from repro.scenarios.runner import run_scenario_soa
+
+    if not soa_available():
+        print("perf_soa_*: jax unavailable, skipping SoA rows")
+        return
+    gen = MarkovScenarioGenerator(transitions=PERF_TRANSITIONS, mean_dwell_s=PERF_DWELL)
+    scen = gen.sample(2.0, seed)
+    for pol, name in (("ads_tile", "perf_soa_ads"), ("tp_driven", "perf_soa_tp")):
+        spec = ScenarioSpec(scenario=scen, policy=pol)
+        for runs in (8, 64):
+            seeds = list(range(seed, seed + runs))
+            gc.collect()
+            t0 = time.perf_counter()
+            run_scenario_soa(spec, seeds)
+            dt_cold = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            run_scenario_soa(spec, seeds)
+            dt_warm = time.perf_counter() - t0
+            derived = (
+                f"runs={runs};compile_s={max(dt_cold - dt_warm, 0.0):.3f};"
+                f"cold_s={dt_cold:.3f};warm_s={dt_warm:.3f}"
+            )
+            lockstep_us = _BATCH_US_PER_RUN.get(pol)
+            if lockstep_us:
+                derived += (
+                    f";speedup_vs_lockstep="
+                    f"{lockstep_us / (dt_warm / runs * 1e6):.2f}"
+                )
+            emit(f"{name}_r{runs}", dt_warm / runs * 1e6, derived)
+
+
 def run(duration: float = 1.0, seed: int = 1) -> None:
     _build_benchmark(duration, seed)
     _recorder_benchmark(duration, seed)
     _sweep_benchmark(duration, seed)
     _batch_benchmark(duration, seed)
+    _soa_benchmark(duration, seed)

@@ -16,6 +16,12 @@ from .engine import (
     SimReport,
 )
 from .policy import Policy
+from .soa import (
+    SoaOptions,
+    SoaUnsupported,
+    soa_available,
+    soa_supported,
+)
 from .trace import Trace, build_skeleton, counter_uniforms, sample_trace
 
 __all__ = [
@@ -27,6 +33,10 @@ __all__ = [
     "SimConfig",
     "SimReport",
     "Policy",
+    "SoaOptions",
+    "SoaUnsupported",
+    "soa_available",
+    "soa_supported",
     "Trace",
     "build_skeleton",
     "counter_uniforms",

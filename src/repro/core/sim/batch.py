@@ -48,12 +48,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ...obs import metrics
-from ..latency_model import LatencyModel
+from ..latency_model import (
+    _NDTRI_PLOW,
+    LatencyModel,
+    _ndtri_central,
+    _ndtri_tail,
+)
 from .engine import JobState, Simulator, SimReport
 from .trace import (
     _C_CYCLE,
     _C_IDX,
     _GOLDEN,
+    _M1 as _M1_INT,
+    _M2 as _M2_INT,
     _MASK64,
     _U64,
     STREAM_IO,
@@ -133,21 +140,140 @@ def _uniforms_batch(
     return ((v >> _U64(11)).astype(np.float64) + 0.5) * (2.0 ** -53)
 
 
+# ---------------------------------------------------------------------------
+# on-device (jnp) sampling path — used by the SoA backend
+# ---------------------------------------------------------------------------
+try:  # jax is a runtime dep, but keep the lockstep engine usable without it
+    import jax as _jax  # noqa: F401
+    import jax.numpy as _jnp
+    from jax.experimental import enable_x64 as _enable_x64
+
+    _HAS_JAX = True
+except Exception:  # pragma: no cover - exercised on jax-less platforms
+    _HAS_JAX = False
+
+
+def _mix64_jnp(x):
+    """splitmix64 finalizer on jnp ``uint64`` (requires x64 mode)."""
+    u = _jnp.uint64
+    x = x ^ (x >> u(30))
+    x = x * u(int(_M1_INT))
+    x = x ^ (x >> u(27))
+    x = x * u(int(_M2_INT))
+    return x ^ (x >> u(31))
+
+
+def _ndtri_jnp(q):
+    """Acklam inverse-normal on jnp arrays, mirroring
+    :func:`repro.core.latency_model.ndtri` branch for branch.  The
+    stream contract's uniforms are strictly inside (0, 1), so the
+    +-inf clamps of the NumPy version are unreachable here."""
+    qc = _jnp.clip(q, 1e-300, 1.0 - 1e-16)
+    lo_t = _ndtri_tail(_jnp.sqrt(-2.0 * _jnp.log(qc)))
+    hi_t = -_ndtri_tail(_jnp.sqrt(-2.0 * _jnp.log(1.0 - qc)))
+    return _jnp.where(
+        q < _NDTRI_PLOW,
+        lo_t,
+        _jnp.where(q > 1.0 - _NDTRI_PLOW, hi_t, _ndtri_central(qc)),
+    )
+
+
+def _uniforms_batch_jnp(seeds, stream, task_keys, regime, cycle, idx):
+    """Device mirror of :func:`_uniforms_batch`: the scalar seed fold
+    stays on host (exact Python-int arithmetic), the broadcast mix runs
+    as jnp uint64 ops.  The integer pipeline is bit-identical to the
+    NumPy path; only the float transforms downstream may differ in the
+    last ulp (XLA's exp/log are not libm)."""
+    h = _jnp.asarray(
+        [_mix64_int(_mix64_int((s & _MASK64) ^ int(_GOLDEN)) ^ stream) for s in seeds],
+        dtype=_jnp.uint64,
+    ).reshape(-1, 1)
+    u = _jnp.uint64
+    v = _mix64_jnp(h ^ task_keys)
+    v = _mix64_jnp(v ^ (regime + u(int(_GOLDEN))))
+    v = _mix64_jnp(v ^ (cycle * u(int(_C_CYCLE)) + u(1)))
+    v = _mix64_jnp(v ^ (idx * u(int(_C_IDX)) + u(2)))
+    return ((v >> u(11)).astype(_jnp.float64) + 0.5) * (2.0**-53)
+
+
+def _sample_trace_batch_jnp(skel, par, seeds):
+    """All R lanes' draws in one on-device pass (float64 via the x64
+    context so the quantile transforms match the NumPy path to the
+    ulp).  Returns host ndarrays — BatchTrace consumers are NumPy."""
+    B, n = len(seeds), skel.n
+    work = np.zeros((B, n), dtype=np.float64)
+    io = np.zeros((B, n), dtype=np.float64)
+    sensor_lat = np.zeros((B, n), dtype=np.float64)
+    with _enable_x64():
+        d = skel.dnn_ix
+        if d.size and B:
+            keys = _jnp.asarray(skel.task_keys[d])
+            reg = _jnp.asarray(skel.regime_arr[d])
+            cyc = _jnp.asarray(skel.cycle_arr[d])
+            idx = _jnp.asarray(skel.idx_arr[d])
+            uw = _uniforms_batch_jnp(seeds, STREAM_WORK, keys, reg, cyc, idx)
+            ui = _uniforms_batch_jnp(seeds, STREAM_IO, keys, reg, cyc, idx)
+            mean = _jnp.asarray(par.mean[d])
+            sigma = _jnp.asarray(par.sigma[d])
+            vals = _jnp.exp(_jnp.asarray(par.mu[d]) + sigma * _ndtri_jnp(uw))
+            w = _jnp.where(mean <= 0.0, 0.0, _jnp.where(sigma <= 0.0, mean, vals))
+            work[:, d] = np.asarray(w * _jnp.asarray(skel.burst[d]))
+            rate = _jnp.asarray(par.io_rate[d])
+            safe = _jnp.where(rate > 0.0, rate, 1.0)
+            queue = -_jnp.log(_jnp.maximum(1.0 - ui, 1e-300)) / safe
+            io[:, d] = np.asarray(
+                _jnp.asarray(par.io_base[d]) + _jnp.where(rate > 0.0, queue, 0.0)
+            )
+
+        s = skel.sen_ix
+        if s.size and B:
+            keys = _jnp.asarray(skel.task_keys[s])
+            reg = _jnp.asarray(skel.regime_arr[s])
+            cyc = _jnp.asarray(skel.cycle_arr[s])
+            idx = _jnp.asarray(skel.idx_arr[s])
+            u_ = _uniforms_batch_jnp(seeds, STREAM_SENSOR, keys, reg, cyc, idx)
+            u_ = 0.001 + 0.998 * u_
+            mean = _jnp.asarray(par.mean[s])
+            sigma = _jnp.asarray(par.sigma[s])
+            vals = _jnp.exp(_jnp.asarray(par.mu[s]) + sigma * _ndtri_jnp(u_))
+            lat = _jnp.where(mean <= 0.0, 0.0, _jnp.where(sigma <= 0.0, mean, vals))
+            sensor_lat[:, s] = np.asarray(lat)
+    return work, io, sensor_lat
+
+
 def sample_trace_batch(
     skel: TraceSkeleton,
     model: LatencyModel,
     scenario,
     seeds: Sequence[int],
+    device: bool = False,
 ) -> BatchTrace:
     """Materialize B seeds' traces in one vectorized pass (the batched
-    mirror of :func:`~repro.core.sim.trace.sample_trace`)."""
+    mirror of :func:`~repro.core.sim.trace.sample_trace`).
+
+    ``device=True`` routes the pass through jnp (the SoA backend's
+    path): same stream contract, same integer hash bit-for-bit, but
+    the float quantile transforms run on-device and may differ from
+    the NumPy path in the last ulp — fine under the distributional
+    equivalence contract, not for the lockstep engine's bit-identity
+    gate.  Falls back to NumPy when jax is unavailable.
+    """
     with metrics.phase("trace_sample"):
         seeds = tuple(int(s) for s in seeds)
         B, n = len(seeds), skel.n
+        par = _params_for(skel, model, scenario)
+        if device and _HAS_JAX:
+            work, io, sensor_lat = _sample_trace_batch_jnp(skel, par, seeds)
+            return BatchTrace(
+                skeleton_key=skel.key,
+                seeds=seeds,
+                work=work,
+                io=io,
+                sensor_lat=sensor_lat,
+            )
         work = np.zeros((B, n), dtype=np.float64)
         io = np.zeros((B, n), dtype=np.float64)
         sensor_lat = np.zeros((B, n), dtype=np.float64)
-        par = _params_for(skel, model, scenario)
 
         d = skel.dnn_ix
         if d.size and B:

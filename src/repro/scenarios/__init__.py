@@ -35,6 +35,8 @@ from .runner import (
     compile_portfolio,
     parallel_map,
     run_scenario,
+    run_scenario_batch,
+    run_scenario_soa,
     summarize,
     sweep,
 )
@@ -59,6 +61,8 @@ __all__ = [
     "compile_portfolio",
     "parallel_map",
     "run_scenario",
+    "run_scenario_batch",
+    "run_scenario_soa",
     "summarize",
     "sweep",
 ]

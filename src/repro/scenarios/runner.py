@@ -14,6 +14,7 @@ reuses it for ``--jobs``).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import multiprocessing
 import os
@@ -41,10 +42,17 @@ __all__ = [
     "run_scenario",
     "run_scenario_batch",
     "run_scenario_group",
+    "run_scenario_soa",
     "parallel_map",
     "sweep",
     "aggregate_sweep",
+    "SWEEP_BACKENDS",
 ]
+
+#: engines ``sweep()``/``_run_group`` can route a scenario group
+#: through.  "scalar" and "lockstep" are bit-identical to each other;
+#: "soa" is distributionally equivalent (see docs/performance.md).
+SWEEP_BACKENDS = ("scalar", "lockstep", "soa")
 
 
 @dataclasses.dataclass
@@ -291,6 +299,60 @@ def run_scenario_batch(
     return reports
 
 
+def run_scenario_soa(
+    spec: ScenarioSpec,
+    seeds: Sequence[int],
+    options=None,
+) -> List[SimReport]:
+    """Run ``len(seeds)`` Monte-Carlo drives of one spec through the
+    structure-of-arrays jax backend and return one report per seed.
+
+    Unlike :func:`run_scenario_batch` (bit-identical lockstep lanes),
+    the SoA backend advances all lanes as jnp arrays through discrete
+    scheduling rounds: reports agree with the scalar engine
+    *distributionally* (KS on chain latencies, CI overlap on summary
+    rates) and *exactly* on structural invariants, but individual
+    event timestamps differ at the round granularity — see
+    ``docs/performance.md#soa-backend`` for the contract and for when
+    this backend is profitable (many seeds of one scenario cell, e.g.
+    tail estimation; the jit compile is amortized across lanes but
+    repaid on every new scenario shape).
+
+    Raises :class:`repro.core.sim.soa.SoaUnsupported` when jax is
+    missing or the spec needs features outside the kernel's support
+    set (predictive replanning, recorders, non-paper policies);
+    callers wanting a silent fallback should check
+    ``soa.soa_available()`` / ``soa.soa_supported(...)`` first.
+    """
+    from ..core.sim import soa
+
+    if not soa.soa_available():
+        raise soa.SoaUnsupported("jax is not available; use run_scenario_batch")
+    if not soa.soa_supported(
+        spec.policy,
+        spec.replan_mode,
+        spec.detection_delay_s,
+        spec.drop_policy,
+        spec.record,
+    ):
+        raise soa.SoaUnsupported(
+            f"spec (policy={spec.policy!r}, replan_mode={spec.replan_mode!r}, "
+            f"record={spec.record}) is outside the SoA support set"
+        )
+    wf, model, sched, portfolio = _prepare_run(spec)
+    scen = spec.scenario
+    duration = scen.duration_s if spec.duration_s is None else spec.duration_s
+    problem = soa.build_problem(
+        wf, model, sched, portfolio,
+        _make_run_policy(spec, portfolio), scen, duration,
+        replan=spec.replan, n_lanes=len(seeds),
+        drop_policy=spec.drop_policy, options=options,
+    )
+    skel = build_skeleton(wf, scen, duration)
+    btrace = sample_trace_batch(skel, model, scen, seeds, device=True)
+    return soa.run_problem(problem, btrace, seeds)
+
+
 def run_scenario_group(
     specs: Sequence[ScenarioSpec], trace: Optional[Trace] = None,
 ) -> List[SimReport]:
@@ -401,7 +463,9 @@ def _run_one(spec: ScenarioSpec) -> Dict[str, object]:
     return summarize(spec, run_scenario(spec))
 
 
-def _run_group(specs: Sequence[ScenarioSpec]) -> List[Dict[str, object]]:
+def _run_group(
+    specs: Sequence[ScenarioSpec], backend: str = "lockstep"
+) -> List[Dict[str, object]]:
     """Run every spec of one scenario seed, sampling its trace once.
 
     All specs in a group share (scenario, seed, workload) and differ
@@ -409,12 +473,41 @@ def _run_group(specs: Sequence[ScenarioSpec]) -> List[Dict[str, object]]:
     policy comparison stays exact at the job level while the sampling
     cost is paid once instead of once per policy.
 
-    Groups of several specs route through the batched lockstep engine
-    (:func:`run_scenario_group`) — per-lane reports are bit-identical
-    to the scalar path (the ``batch-equivalence`` CI gate pins this),
-    so sweep rows are unchanged.
+    ``backend`` selects the engine (see :data:`SWEEP_BACKENDS`):
+
+    * ``"lockstep"`` (default) — several specs route through the
+      batched lockstep engine (:func:`run_scenario_group`); per-lane
+      reports are bit-identical to the scalar path (the
+      ``batch-equivalence`` CI gate pins this), so sweep rows are
+      unchanged.
+    * ``"scalar"`` — the per-event reference engine, one spec at a
+      time (still sharing the group's sampled trace).
+    * ``"soa"`` — the structure-of-arrays jax backend.  Rows are
+      distributionally (not bitwise) equivalent to the other two.  A
+      sweep group holds *one* seed per scenario, which is the SoA
+      backend's worst shape (the jit compile cache only pays off
+      across many seeds of one skeleton), so this selector exists for
+      apples-to-apples validation sweeps; throughput work should call
+      :func:`run_scenario_soa` with many seeds per cell instead.
+      Specs outside the SoA support set fall back to the scalar
+      engine, mirroring the lockstep engine's per-lane fallback.
     """
-    if len(specs) <= 1:
+    if backend not in SWEEP_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r} (choose from {SWEEP_BACKENDS})")
+    if backend == "soa":
+        from ..core.sim import soa
+
+        rows = []
+        for s in specs:
+            if soa.soa_available() and soa.soa_supported(
+                s.policy, s.replan_mode, s.detection_delay_s,
+                s.drop_policy, s.record,
+            ):
+                rows.append(summarize(s, run_scenario_soa(s, [s.seed])[0]))
+            else:
+                rows.append(summarize(s, run_scenario(s)))
+        return rows
+    if len(specs) <= 1 or backend == "scalar":
         return [summarize(s, run_scenario(s)) for s in specs]
     trace = build_trace(specs[0])
     reports = run_scenario_group(specs, trace=trace)
@@ -429,6 +522,7 @@ def sweep(
     jobs: Optional[int] = None,
     generator: Optional[MarkovScenarioGenerator] = None,
     replan: bool = True,
+    backend: str = "lockstep",
     **spec_kw,
 ) -> List[Dict[str, object]]:
     """Monte-Carlo sweep: ``n_scenarios`` Markov drives x ``policies``.
@@ -439,6 +533,13 @@ def sweep(
     reproducible from ``seed`` alone.  The unit of parallel work is one
     *scenario* (all its policies run in the same worker, sharing one
     sampled trace and one cached structural skeleton).
+
+    ``backend`` selects the per-group engine (see :func:`_run_group`):
+    ``"lockstep"`` (default, bit-identical rows), ``"scalar"``
+    (reference engine), or ``"soa"`` (distributionally-equivalent jax
+    backend; per-scenario jit compiles make it the validation shape
+    here, not the throughput shape — use :func:`run_scenario_soa`
+    directly for many-seed cells).
     """
     gen = generator or default_generator()
     all_modes = sorted(gen.transitions)
@@ -462,7 +563,9 @@ def sweep(
                 portfolios[pol] = compile_portfolio(spec, all_modes)
             group.append(dataclasses.replace(spec, portfolio=portfolios[pol]))
         groups.append(group)
-    rows_per_group = parallel_map(_run_group, groups, jobs)
+    rows_per_group = parallel_map(
+        functools.partial(_run_group, backend=backend), groups, jobs
+    )
     return [row for rows in rows_per_group for row in rows]
 
 

@@ -23,7 +23,7 @@ from repro.scenarios.runner import (
     run_scenario_batch,
     run_scenario_group,
 )
-from repro.scenarios.script import MarkovScenarioGenerator, get_scenario
+from repro.scenarios.script import default_generator, get_scenario
 
 SEEDS = [0, 7]
 
@@ -121,7 +121,7 @@ else:
     def test_property_random_scenarios_match_scalar(
         gen_seed, run_seed, duration, policy, replicas
     ):
-        scen = MarkovScenarioGenerator().sample(duration, gen_seed)
+        scen = default_generator().sample(duration, gen_seed)
         spec = ScenarioSpec(scenario=scen, policy=policy, cockpit_replicas=replicas)
         seeds = [run_seed, run_seed + 1]
         reports = run_scenario_batch(spec, seeds)
