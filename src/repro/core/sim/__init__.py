@@ -19,6 +19,7 @@ from .policy import Policy
 from .soa import (
     SoaOptions,
     SoaUnsupported,
+    SoaWindowOverflow,
     soa_available,
     soa_supported,
 )
@@ -35,6 +36,7 @@ __all__ = [
     "Policy",
     "SoaOptions",
     "SoaUnsupported",
+    "SoaWindowOverflow",
     "soa_available",
     "soa_supported",
     "Trace",

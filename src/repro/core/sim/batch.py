@@ -165,16 +165,22 @@ def _mix64_jnp(x):
 
 def _ndtri_jnp(q):
     """Acklam inverse-normal on jnp arrays, mirroring
-    :func:`repro.core.latency_model.ndtri` branch for branch.  The
-    stream contract's uniforms are strictly inside (0, 1), so the
-    +-inf clamps of the NumPy version are unreachable here."""
+    :func:`repro.core.latency_model.ndtri` branch for branch —
+    *including* the +-inf boundary clamps: the stream contract's
+    uniforms are ``(m + 0.5) * 2**-53`` whose supremum ``1 - 2**-54``
+    rounds to exactly 1.0 in binary64, so ``q >= 1.0`` is a reachable
+    input (probability ~1e-16 per draw) and must map to ``+inf`` like
+    the NumPy path, not to the clip's finite tail value."""
     qc = _jnp.clip(q, 1e-300, 1.0 - 1e-16)
     lo_t = _ndtri_tail(_jnp.sqrt(-2.0 * _jnp.log(qc)))
     hi_t = -_ndtri_tail(_jnp.sqrt(-2.0 * _jnp.log(1.0 - qc)))
-    return _jnp.where(
+    out = _jnp.where(
         q < _NDTRI_PLOW,
         lo_t,
         _jnp.where(q > 1.0 - _NDTRI_PLOW, hi_t, _ndtri_central(qc)),
+    )
+    return _jnp.where(
+        q <= 0.0, -_jnp.inf, _jnp.where(q >= 1.0, _jnp.inf, out)
     )
 
 

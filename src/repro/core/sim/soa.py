@@ -42,6 +42,7 @@ from . import soa_kernels as K
 __all__ = [
     "SoaOptions",
     "SoaUnsupported",
+    "SoaWindowOverflow",
     "soa_available",
     "soa_supported",
     "build_problem",
@@ -62,6 +63,23 @@ def soa_available() -> bool:
 
 class SoaUnsupported(ValueError):
     """The requested cell is outside the SoA backend's support set."""
+
+
+class SoaWindowOverflow(SoaUnsupported):
+    """A job slid out of the sliding job window still unresolved.
+
+    The window lifetime bound assumes every job resolves within its E2E
+    deadline plus the drop-cascade slack; under ``drop_policy="soft"``
+    (the runner's default) an overloaded cell legally queues/runs jobs
+    past their E2E deadline, and a job that exits the window while
+    still PEND/READY/RUN would silently freeze — counted as a miss with
+    all its successors starved.  :func:`run_problem` detects this on
+    the final state planes and raises instead of returning truncated
+    results; callers either widen :attr:`SoaOptions.life_pad_s` (the
+    runner's :func:`~repro.scenarios.runner.run_scenario_soa` retries
+    with a doubled window automatically) or fall back to the
+    scalar/lockstep engines.
+    """
 
 
 def soa_supported(
@@ -108,6 +126,14 @@ class SoaOptions:
 
     dt_s: float = 1e-3
     window_round: int = 16      # round the job window up to a multiple
+    #: extra seconds added to the job-window lifetime bound (how long a
+    #: job may stay unresolved past its release before it slides out of
+    #: the window).  The default bound assumes jobs resolve by their
+    #: E2E deadline; under ``drop_policy="soft"`` overload queues jobs
+    #: past it — :class:`SoaWindowOverflow` reports when the bound was
+    #: too tight and the runner retries with a doubled window.  The
+    #: effective lifetime is capped at the horizon (full coverage).
+    life_pad_s: float = 0.0
     #: EDF fixed-point refinement steps; None resolves per policy —
     #: tp_driven's event walk needs the exact sequential fixed point
     #: (8), cyc/ads converge by 3 (measured KS-identical vs 8)
@@ -148,6 +174,8 @@ class SoaProblem:
     tiles_reserved_mean: float
     frontier_meta: Dict[str, object]
     skeleton_key: tuple
+    life: float                 # job-window lifetime bound (seconds)
+    win_lo_final: int           # highest window lower bound over rounds
 
 
 def _policy_knobs(policy) -> Tuple[bool, bool, bool, float]:
@@ -324,10 +352,21 @@ def build_problem(
     n_rounds = len(t0s)
 
     # ---- job windows --------------------------------------------------
-    # terminality bound: every job resolves by its E2E deadline; the
-    # drop cascade discovers one dependency hop per round
+    # lifetime bound: jobs normally resolve by their E2E deadline (plus
+    # one dependency hop per round for the drop cascade).  Under
+    # drop_mode 0 overload legally queues jobs past the E2E deadline:
+    # ``life_pad_s`` widens the bound, the cap at the horizon makes a
+    # wide-enough retry always possible, and run_problem's post-check
+    # raises SoaWindowOverflow if the bound still proved too tight
+    # (never silently truncates).
     max_hops = max((len(c.nodes) for c in wf.chains), default=4)
-    life = float(np.max(ddl_off[np.isfinite(ddl_off)])) + (max_hops + 4) * dt
+    cascade = (max_hops + 4) * dt
+    life = (
+        float(np.max(ddl_off[np.isfinite(ddl_off)]))
+        + cascade
+        + float(opt.life_pad_s)
+    )
+    life = min(max(life, 2 * dt), duration + cascade)
     lo = np.searchsorted(rel, t1s - life, side="left")
     hi = np.searchsorted(rel, t1s, side="right")
     wr = int(opt.window_round)
@@ -553,6 +592,8 @@ def build_problem(
         tiles_reserved_mean=float(reserved / duration),
         frontier_meta=dict(schedule0.meta.get("autotune") or {}),
         skeleton_key=skel.key,
+        life=float(life),
+        win_lo_final=int(lo.max()) if n_rounds else 0,
     )
 
 
@@ -593,6 +634,26 @@ def run_problem(
             f"problem compiled for R={problem.cfg.R}, got {len(seeds)} seeds"
         )
     out = K.simulate(problem.cfg, problem.const, _lanes(problem, btrace))
+    # jobs below the final window lower bound had their window close
+    # before the horizon end; any still unresolved there froze mid-queue
+    # (overload past the lifetime bound) and the lane's report would
+    # silently miscount it as a miss and starve its successors
+    cut = min(problem.win_lo_final, problem.n_real)
+    if cut > 0:
+        stuck = out["state"][:, :cut] < K.DONE
+        if np.any(stuck):
+            n_lanes = int(np.sum(np.any(stuck, axis=1)))
+            n_jobs = int(np.max(np.sum(stuck, axis=1)))
+            raise SoaWindowOverflow(
+                f"up to {n_jobs} job(s) per lane slid out of the "
+                f"{problem.life:.3f}s SoA job window unresolved "
+                f"({n_lanes}/{problem.cfg.R} lanes affected): the cell "
+                "queues jobs past the E2E-deadline lifetime bound "
+                "(overload under drop_policy='soft').  Widen "
+                "SoaOptions.life_pad_s (run_scenario_soa retries with a "
+                "doubled window automatically) or use the scalar/"
+                "lockstep backend for this cell."
+            )
     return _assemble_reports(problem, out)
 
 

@@ -41,6 +41,7 @@ the scalar/lockstep engines (and their tests) never notice.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import partial
 from typing import Dict, Tuple
 
@@ -844,6 +845,25 @@ def clear_kernel_cache() -> None:
     _LOOP_CACHE.clear()
 
 
+def _const_digest(const_np: Dict[str, np.ndarray]) -> bytes:
+    """Content identity of the host-precomputed statics.
+
+    The compiled loop closes over the ``const`` arrays as baked-in
+    compile-time constants, so the cache key must distinguish cells by
+    *value*, not just shape: two portfolios (different caps / deadline
+    bindings / staging volumes) over the same skeleton share every
+    shape yet need different compiled loops.
+    """
+    h = hashlib.sha1()
+    for k in sorted(const_np):
+        v = np.ascontiguousarray(const_np[k])
+        h.update(k.encode())
+        h.update(str(v.dtype).encode())
+        h.update(str(v.shape).encode())
+        h.update(v.tobytes())
+    return h.digest()
+
+
 def simulate(
     cfg: KernelConfig,
     const_np: Dict[str, np.ndarray],
@@ -854,15 +874,17 @@ def simulate(
     ``const_np`` holds the host-precomputed statics (see
     :func:`repro.core.sim.soa.build_problem`), ``lanes_np`` the per-lane
     trace data (``work``, ``io``, ``codes0``).  The compiled loop is
-    cached on ``(cfg, shapes)``; re-running the same scenario cell with
-    new seeds skips compilation entirely.
+    cached on ``(cfg, const-content digest, lane shapes)`` — the const
+    arrays are closed over as compile-time constants, so the key must
+    carry their *values* (see :func:`_const_digest`); re-running the
+    same scenario cell with new seeds skips compilation entirely.
     """
     if not HAS_JAX:  # pragma: no cover
         raise RuntimeError("repro.core.sim.soa requires jax")
     R, N = lanes_np["work"].shape
     key = (
         cfg,
-        tuple(sorted((k, v.shape) for k, v in const_np.items())),
+        _const_digest(const_np),
         (R, N, lanes_np["codes0"].shape[1]),
     )
     cached = _LOOP_CACHE.get(key)

@@ -18,6 +18,7 @@ import functools
 import math
 import multiprocessing
 import os
+import warnings
 from typing import Callable, Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
@@ -299,6 +300,11 @@ def run_scenario_batch(
     return reports
 
 
+#: per-process memo of SoA window pads that proved necessary, keyed by
+#: (skeleton key, policy, drop policy, duration) — see run_scenario_soa
+_SOA_LIFE_PAD_HINT: Dict[tuple, float] = {}
+
+
 def run_scenario_soa(
     spec: ScenarioSpec,
     seeds: Sequence[int],
@@ -342,15 +348,52 @@ def run_scenario_soa(
     wf, model, sched, portfolio = _prepare_run(spec)
     scen = spec.scenario
     duration = scen.duration_s if spec.duration_s is None else spec.duration_s
-    problem = soa.build_problem(
-        wf, model, sched, portfolio,
-        _make_run_policy(spec, portfolio), scen, duration,
-        replan=spec.replan, n_lanes=len(seeds),
-        drop_policy=spec.drop_policy, options=options,
-    )
     skel = build_skeleton(wf, scen, duration)
     btrace = sample_trace_batch(skel, model, scen, seeds, device=True)
-    return soa.run_problem(problem, btrace, seeds)
+    # overloaded cells under drop_policy="soft" can queue jobs past the
+    # default job-window lifetime bound; the backend refuses to return
+    # truncated results (SoaWindowOverflow), so retry wider: first a
+    # doubled window (mild overruns), then one capped at the horizon —
+    # full job coverage, structurally incapable of overflowing.  A pad
+    # that worked is remembered per cell so repeat calls (seed batches
+    # of one cell, the backend's throughput shape) skip the discarded
+    # detection run; the hint only ever *widens* the default, and only
+    # applies when the caller did not pass explicit options.
+    hint_key = (skel.key, spec.policy, spec.drop_policy, float(duration))
+    opt0 = options if options is not None else soa.SoaOptions(
+        life_pad_s=_SOA_LIFE_PAD_HINT.get(hint_key, 0.0)
+    )
+    opt = opt0
+    for attempt in range(3):
+        problem = soa.build_problem(
+            wf, model, sched, portfolio,
+            _make_run_policy(spec, portfolio), scen, duration,
+            replan=spec.replan, n_lanes=len(seeds),
+            drop_policy=spec.drop_policy, options=opt,
+        )
+        try:
+            reports = soa.run_problem(problem, btrace, seeds)
+        except soa.SoaWindowOverflow:
+            if problem.life >= duration or attempt == 2:
+                raise
+            warnings.warn(
+                f"SoA job window ({problem.life:.3f}s) overflowed under "
+                "overload; retrying with a "
+                + ("doubled" if attempt == 0 else "full-horizon")
+                + " window (recompiles the round loop)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            pad = problem.life if attempt == 0 else duration
+            opt = dataclasses.replace(
+                opt0, life_pad_s=opt0.life_pad_s + pad
+            )
+        else:
+            if options is None and opt.life_pad_s > _SOA_LIFE_PAD_HINT.get(
+                hint_key, 0.0
+            ):
+                _SOA_LIFE_PAD_HINT[hint_key] = opt.life_pad_s
+            return reports
 
 
 def run_scenario_group(

@@ -77,6 +77,97 @@ def test_soa_distributionally_equivalent(policy):
 
 
 # ---------------------------------------------------------------------------
+# compile-cache identity: same shapes, different schedule constants
+# ---------------------------------------------------------------------------
+@needs_jax
+def test_kernel_cache_distinguishes_const_content():
+    """Two cells over the same skeleton (same array shapes) but with
+    different schedule constants must not share a compiled loop: the
+    jit closure bakes the const arrays in at trace time, so a
+    shape-only cache key silently replays the first cell's schedule
+    (the figS_budget part-3 shape: one pinned drive, several
+    portfolios/load factors in one process)."""
+    from repro.scenarios.runner import _make_run_policy, _prepare_run
+
+    spec_a = ScenarioSpec(scenario=get_scenario("commute"), policy="ads_tile")
+    spec_b = dataclasses.replace(spec_a, load_factor=1.4)
+
+    def _problem(spec):
+        wf, model, sched, portfolio = _prepare_run(spec)
+        return soa.build_problem(
+            wf, model, sched, portfolio, _make_run_policy(spec, portfolio),
+            spec.scenario, spec.scenario.duration_s, n_lanes=len(SEEDS),
+        )
+
+    pa, pb = _problem(spec_a), _problem(spec_b)
+    # potency: the cells collide on a shape-only key...
+    assert {k: v.shape for k, v in pa.const.items()} == {
+        k: v.shape for k, v in pb.const.items()
+    }
+    assert pa.cfg == pb.cfg
+    # ...and only the content digest tells them apart
+    assert K._const_digest(pa.const) != K._const_digest(pb.const)
+
+    K.clear_kernel_cache()
+    fresh = run_scenario_soa(spec_b, SEEDS)
+    K.clear_kernel_cache()
+    run_scenario_soa(spec_a, SEEDS)        # warm the cache with A's consts
+    got = run_scenario_soa(spec_b, SEEDS)  # must not reuse A's loop
+    for f, g in zip(fresh, got):
+        assert f.chain_latencies == g.chain_latencies
+        assert f.violation_rate == g.violation_rate
+        assert f.effective_frac == g.effective_frac
+        assert f.realloc_frac == g.realloc_frac
+
+
+# ---------------------------------------------------------------------------
+# window-lifetime overflow: detect, refuse, retry wider
+# ---------------------------------------------------------------------------
+@needs_jax
+def test_window_overflow_detected_and_retried():
+    """A job that slides out of the job window unresolved (overload
+    queueing past the E2E-deadline lifetime bound under the soft drop
+    policy) must surface as SoaWindowOverflow, never as silently
+    truncated reports; the runner retries with a wider window."""
+    from repro.core.sim.trace import build_skeleton
+    from repro.scenarios.runner import _prepare_run
+
+    spec = ScenarioSpec(scenario=get_scenario("commute"), policy="tp_driven")
+    wf, model, sched, portfolio = _prepare_run(spec)
+    scen = spec.scenario
+    duration = scen.duration_s
+
+    base = soa.build_problem(
+        wf, model, sched, portfolio, "tp_driven", scen, duration,
+        n_lanes=len(SEEDS),
+    )
+    # shrink the window to ~4 ms: normal jobs outlive it, so they slide
+    # out unresolved — the forced analogue of overload queueing delay
+    tight = soa.SoaOptions(life_pad_s=-(base.life - 4e-3))
+    problem = soa.build_problem(
+        wf, model, sched, portfolio, "tp_driven", scen, duration,
+        n_lanes=len(SEEDS), options=tight,
+    )
+    assert problem.life < base.life
+    skel = build_skeleton(wf, scen, duration)
+    btrace = sample_trace_batch(skel, model, scen, SEEDS, device=True)
+    with pytest.raises(soa.SoaWindowOverflow):
+        soa.run_problem(problem, btrace, SEEDS)
+
+    # the runner widens and converges to non-truncated reports
+    with pytest.warns(RuntimeWarning, match="SoA job window"):
+        got = run_scenario_soa(spec, SEEDS, options=tight)
+    want = run_scenario_soa(spec, SEEDS)
+    assert len(got) == len(SEEDS)
+    for a, b in zip(want, got):
+        assert soa.structural_invariants(a) == soa.structural_invariants(b)
+        # truncation starves whole chains (violation rate ~1); the
+        # widened rerun must sit at the default window's level
+        assert abs(a.violation_rate - b.violation_rate) <= 0.05
+        assert np.isclose(a.effective_frac, b.effective_frac, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
 # support predicates + clean degradation without jax
 # ---------------------------------------------------------------------------
 def test_soa_supported_predicate():
