@@ -8,10 +8,10 @@ Usage::
         [--scenarios all] [--min-speedup 1.1] [--ks-tol 0.08]
 
 For every bundled scenario x policy x pinned seed, the same run is
-executed twice — once through :func:`repro.scenarios.runner.run_scenario`
-(the scalar reference engine) and once through
-:func:`~repro.scenarios.runner.run_scenario_batch` (the lockstep batch
-engine, all seeds of a cell in one batch) — and the two
+executed twice through :func:`repro.scenarios.runner.run` — once with
+``backend="scalar"`` (the scalar reference engine) and once with
+``backend="lockstep"`` (the lockstep batch engine, all seeds of a cell
+in one batch) — and the two
 :class:`~repro.core.sim.engine.SimReport` objects are compared through
 :func:`repro.core.sim.batch.report_digest`.  The digest covers every
 float in the report (latencies, violations, utilization, per-mode
@@ -35,7 +35,8 @@ scheduling rounds, so bit-identity is out of reach *by design* and the
 contract is statistical (docs/performance.md#soa-backend).  Per
 scenario x policy cell, the pinned seed set runs through both the
 lockstep engine (bit-identical to scalar, cheaper to drive) and
-``run_scenario_soa``, and the gate asserts:
+``run(spec, seeds=..., backend="soa", fallback=False)``, and the gate
+asserts:
 
 * **structural invariants** (job universe, seam spans, chain universe,
   reservation footprint) match exactly, per seed;
@@ -61,11 +62,7 @@ import time
 from typing import List, Sequence
 
 from repro.core.sim.batch import report_digest
-from repro.scenarios.runner import (
-    ScenarioSpec,
-    run_scenario,
-    run_scenario_batch,
-)
+from repro.scenarios.runner import ScenarioSpec, run as run_specs
 from repro.scenarios.script import (
     BUNDLED_SCENARIOS,
     MarkovScenarioGenerator,
@@ -79,10 +76,10 @@ DEFAULT_POLICIES = ("cyc", "tp_driven", "ads_tile")
 def run_cell(scenario: str, policy: str, seeds: Sequence[int]) -> List[bool]:
     """Per-seed bit-identity verdicts for one scenario x policy cell."""
     spec = ScenarioSpec(scenario=get_scenario(scenario), policy=policy)
-    batched = run_scenario_batch(spec, list(seeds))
+    batched = run_specs(spec, seeds=list(seeds), backend="lockstep")
     out = []
     for s, rb in zip(seeds, batched):
-        rs = run_scenario(dataclasses.replace(spec, seed=int(s)))
+        [rs] = run_specs(dataclasses.replace(spec, seed=int(s)), backend="scalar")
         out.append(report_digest(rs) == report_digest(rb))
     return out
 
@@ -93,7 +90,7 @@ def run_cell_distributional(
     """SoA-vs-scalar statistical verdicts for one scenario x policy
     cell: exact structural invariants, pooled chain-latency KS, and CI
     overlap on the summary rates.  The scalar side is driven through
-    the lockstep engine, whose bit-identity to ``run_scenario`` the
+    the lockstep engine, whose bit-identity to the scalar backend the
     bitwise mode of this gate pins separately."""
     from repro.core.sim.soa import (
         intervals_overlap,
@@ -101,11 +98,10 @@ def run_cell_distributional(
         mean_ci,
         structural_invariants,
     )
-    from repro.scenarios.runner import run_scenario_soa
 
     spec = ScenarioSpec(scenario=get_scenario(scenario), policy=policy)
-    ref = run_scenario_batch(spec, list(seeds))
-    soa = run_scenario_soa(spec, list(seeds))
+    ref = run_specs(spec, seeds=list(seeds), backend="lockstep")
+    soa = run_specs(spec, seeds=list(seeds), backend="soa", fallback=False)
     struct_ok = all(
         structural_invariants(a) == structural_invariants(b) for a, b in zip(ref, soa)
     )
@@ -134,14 +130,14 @@ def measure_speedup(seeds: Sequence[int]) -> tuple:
 
     gen = MarkovScenarioGenerator(transitions=PERF_TRANSITIONS, mean_dwell_s=PERF_DWELL)
     spec = ScenarioSpec(scenario=gen.sample(2.0, 1), policy="ads_tile")
-    run_scenario_batch(spec, list(seeds)[:2])  # warm caches for both paths
-    run_scenario(dataclasses.replace(spec, seed=int(seeds[0])))
+    run_specs(spec, seeds=list(seeds)[:2])  # warm caches for both paths
+    run_specs(dataclasses.replace(spec, seed=int(seeds[0])))
     t0 = time.perf_counter()
     for s in seeds:
-        run_scenario(dataclasses.replace(spec, seed=int(s)))
+        run_specs(dataclasses.replace(spec, seed=int(s)))
     scalar_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    run_scenario_batch(spec, list(seeds))
+    run_specs(spec, seeds=list(seeds))
     batch_s = time.perf_counter() - t0
     return scalar_s, batch_s
 

@@ -1,0 +1,114 @@
+"""CI smoke gate: the content-addressed sweep cache must actually hit.
+
+Usage::
+
+    python -m benchmarks.check_sweep_cache [--cache-dir DIR]
+
+Runs a small pinned campaign (2 Markov-sampled scenarios x 2 policies)
+twice against the same cache directory and asserts the redesigned sweep
+service's headline contract (docs/sweeps.md):
+
+* the first run executes every cell and caches every row;
+* the second, byte-identical campaign executes **zero** cells — all
+  rows come back from the content-addressed cache;
+* the two runs' row lists compare equal (dict equality, not digests:
+  cached rows round-trip through JSON, and JSON float round-trips are
+  exact);
+* a third run resumed from the first run's manifest also executes
+  zero cells and reproduces the same rows.
+
+Cheap enough for the tier-1 PR path (one 2x2 cell grid at 0.5
+simulated seconds).  Exit 1 on any violated invariant, 0 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+from repro.sweeps import CampaignSpec, run_campaign
+
+
+def _campaign() -> CampaignSpec:
+    return CampaignSpec(
+        name="cache-smoke",
+        n_scenarios=2,
+        policies=("ads_tile", "tp_driven"),
+        scenario_duration_s=0.5,
+        seed=11,
+    )
+
+
+def check(cache_dir: str) -> int:
+    manifest = str(Path(cache_dir) / "manifest.json")
+    first = run_campaign(
+        _campaign(), cache_dir=cache_dir, manifest_path=manifest
+    )
+    print(
+        f"first run : {first.n_cells} cells, "
+        f"{first.n_executed} executed, {first.n_cached} cached"
+    )
+    second = run_campaign(
+        _campaign(), cache_dir=cache_dir, manifest_path=manifest
+    )
+    print(
+        f"second run: {second.n_cells} cells, "
+        f"{second.n_executed} executed, {second.n_cached} cached"
+    )
+    resumed = run_campaign(manifest)
+    print(
+        f"resumed   : {resumed.n_cells} cells, "
+        f"{resumed.n_executed} executed, {resumed.n_cached} cached"
+    )
+
+    failures = []
+    if first.n_failed or second.n_failed or resumed.n_failed:
+        failures.append("campaign reported failed cells")
+    if second.n_executed != 0:
+        failures.append(
+            f"repeat run executed {second.n_executed} cells (want 0): "
+            "cell keys are unstable or the cache missed"
+        )
+    if second.n_cached != second.n_cells:
+        failures.append(
+            f"repeat run cached {second.n_cached}/{second.n_cells} cells"
+        )
+    if resumed.n_executed != 0:
+        failures.append(
+            f"manifest resume executed {resumed.n_executed} cells (want 0)"
+        )
+    if second.rows != first.rows:
+        failures.append("cached rows differ from freshly executed rows")
+    if resumed.rows != first.rows:
+        failures.append("manifest-resumed rows differ from the first run")
+
+    if failures:
+        for f in failures:
+            print(f"sweep-cache gate failed: {f}", file=sys.stderr)
+        return 1
+    print(
+        f"sweep-cache gate OK: repeat of {first.n_cells} cells was "
+        "100% cache-hit, rows identical"
+    )
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--cache-dir",
+        default=None,
+        metavar="DIR",
+        help="cache directory to exercise (default: a fresh temp dir, "
+        "so the first run is guaranteed cold)",
+    )
+    args = ap.parse_args(argv)
+    if args.cache_dir:
+        return check(args.cache_dir)
+    with tempfile.TemporaryDirectory(prefix="sweep-cache-gate-") as tmp:
+        return check(tmp)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,12 +2,47 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable, List
+from typing import Callable, Mapping, Optional
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """One CSV row: ``name,us_per_call,derived``."""
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def attribution_derived(att: Optional[Mapping[str, object]]) -> str:
+    """Render a deadline-miss attribution dict (per-run or aggregated)
+    into the ``derived`` field's ``late=..;att_*=..`` segment."""
+    att = att or {}
+    comp = att.get("components_s", {}) or {}
+    return (
+        f"late={att.get('n_late', 0)};"
+        f"att_queue={comp.get('queueing', 0.0):.4f};"
+        f"att_stall={comp.get('realloc_stall', 0.0):.4f};"
+        f"att_stagger={comp.get('restagger', 0.0):.4f};"
+        f"att_tail={comp.get('duration_tail', 0.0):.4f}"
+    )
+
+
+def emit_sweep_aggregate(
+    agg: Mapping[str, Mapping[str, object]], prefix: str
+) -> None:
+    """One :func:`emit` row per policy from a sweep aggregate table
+    (``repro.scenarios.aggregate_sweep`` / ``SweepReducer.result()``) —
+    shared by the figS sweep suite and the campaign front-end."""
+    for pol, a in agg.items():
+        per_mode = ";".join(
+            f"{m}_viol={st['violation_rate']:.4f}"
+            for m, st in a["per_mode"].items()
+        )
+        emit(
+            f"{prefix}_{pol}",
+            a["violation_rate"] * 1e6,
+            f"n={a['n']};viol={a['violation_rate']:.4f};"
+            f"miss={a['task_miss_rate']:.4f};"
+            f"realloc={a['realloc_frac']:.4f};"
+            f"{attribution_derived(a.get('attribution'))};{per_mode}",
+        )
 
 
 def timed(fn: Callable, *args, repeat: int = 1) -> float:

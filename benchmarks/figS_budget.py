@@ -45,7 +45,7 @@ import dataclasses
 from repro.core.experiment import build_stack
 from repro.core.runtime import SchedulePortfolio
 from repro.scenarios import ScenarioSpec, get_mode, get_scenario
-from repro.scenarios.runner import _run_group, build_trace, run_scenario
+from repro.scenarios.runner import _run_group, build_trace, run as run_specs
 from repro.scenarios.script import MarkovScenarioGenerator
 
 from .common import emit
@@ -128,7 +128,7 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
         viol, mean_tiles = 0.0, 0.0
         for s in seeds:
             sp = dataclasses.replace(spec, seed=s, portfolio=pf)
-            r = run_scenario(sp, trace=traces[s])
+            [r] = run_specs(sp, trace=traces[s])
             viol += r.violation_rate
             mean_tiles += r.tiles_reserved_mean
         return viol / len(seeds), mean_tiles / len(seeds)
@@ -265,7 +265,6 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
 
     # -- part 3: tiles-saved-vs-load curve (Fig. 13 analogue) -----------
     from repro.core.sim.soa import soa_available
-    from repro.scenarios.runner import run_scenario_batch, run_scenario_soa
 
     script3 = gen.sample(2.0, seed=seed * 100003)  # one pinned bursty drive
     seeds3 = list(range(seed, seed + n))
@@ -274,11 +273,9 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
     def cell_stats(spec):
         """(mean violation rate, mean reserved tiles) over the R-seed
         cell — SoA lanes when jax is present, lockstep lanes otherwise
-        (the curve is a statistical statement either way)."""
-        if backend3 == "soa":
-            reports = run_scenario_soa(spec, seeds3)
-        else:
-            reports = run_scenario_batch(spec, seeds3)
+        via run()'s per-spec fallback (the curve is a statistical
+        statement either way)."""
+        reports = run_specs(spec, seeds=seeds3, backend=backend3)
         return (
             mean([r.violation_rate for r in reports]),
             mean([r.tiles_reserved_mean for r in reports]),

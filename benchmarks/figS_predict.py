@@ -45,7 +45,7 @@ from repro.scenarios.runner import (
     build_trace,
     compile_portfolio,
     parallel_map,
-    run_scenario,
+    run as run_specs,
 )
 
 from .common import emit
@@ -91,7 +91,7 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
         spec = dataclasses.replace(base, seed=s, portfolio=pf)
         trace = build_trace(spec)
         for mode in REPLAN_MODES:
-            r = run_scenario(
+            [r] = run_specs(
                 dataclasses.replace(spec, replan_mode=mode), trace=trace
             )
             v, c = _post_seam(r, scen.segments[0].mode)

@@ -30,7 +30,7 @@ from repro.scenarios import (
     ScenarioSpec,
     compile_portfolio,
     get_scenario,
-    run_scenario,
+    run as run_specs,
 )
 
 from .common import emit
@@ -61,7 +61,7 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
         base = ScenarioSpec(scenario=churn, policy=policy, seed=seed)
         base = dataclasses.replace(base, portfolio=compile_portfolio(base))
         for replan in (True, False):
-            r = run_scenario(dataclasses.replace(base, replan=replan))
+            [r] = run_specs(dataclasses.replace(base, replan=replan))
             tag = "replan" if replan else "pinned"
             _emit_run(f"figS_rates_churn_{policy}_{tag}", r)
             if replan:
@@ -92,5 +92,5 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
     for name, scen in pairs.items():
         for policy in ("ads_tile", "tp_driven"):
             spec = ScenarioSpec(scenario=scen, policy=policy, seed=seed)
-            r = run_scenario(spec)
+            [r] = run_specs(spec)
             _emit_run(f"figS_rates_{name}_{policy}", r)

@@ -25,11 +25,11 @@ from repro.scenarios import (
     build_trace,
     compile_portfolio,
     get_scenario,
-    run_scenario,
+    run as run_specs,
     sweep,
 )
 
-from .common import emit
+from .common import attribution_derived, emit, emit_sweep_aggregate
 
 
 def run(duration: float = 1.0, seed: int = 1) -> None:
@@ -49,21 +49,13 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
                                 record=True)
             base = dataclasses.replace(base, portfolio=compile_portfolio(base))
             for replan in (True, False):
-                r = run_scenario(dataclasses.replace(base, replan=replan),
-                                 trace=trace)
+                [r] = run_specs(dataclasses.replace(base, replan=replan),
+                                trace=trace)
                 per_mode = ";".join(
                     f"{m}_viol={s.violation_rate:.4f}"
                     for m, s in sorted(r.mode_stats.items())
                 )
-                att = r.attribution or {}
-                comp = att.get("components_s", {})
-                att_str = (
-                    f"late={att.get('n_late', 0)};"
-                    f"att_queue={comp.get('queueing', 0.0):.4f};"
-                    f"att_stall={comp.get('realloc_stall', 0.0):.4f};"
-                    f"att_stagger={comp.get('restagger', 0.0):.4f};"
-                    f"att_tail={comp.get('duration_tail', 0.0):.4f}"
-                )
+                att_str = attribution_derived(r.attribution)
                 tag = "replan" if replan else "pinned"
                 emit(
                     f"figS_{name}_{policy}_{tag}",
@@ -79,25 +71,4 @@ def run(duration: float = 1.0, seed: int = 1) -> None:
         n, policies=("ads_tile", "tp_driven"),
         duration_s=2.0, seed=seed, record=True,
     )
-    agg = aggregate_sweep(rows)
-    for pol, a in agg.items():
-        per_mode = ";".join(
-            f"{m}_viol={st['violation_rate']:.4f}"
-            for m, st in a["per_mode"].items()
-        )
-        att = a.get("attribution") or {}
-        comp = att.get("components_s", {})
-        att_str = (
-            f"late={att.get('n_late', 0)};"
-            f"att_queue={comp.get('queueing', 0.0):.4f};"
-            f"att_stall={comp.get('realloc_stall', 0.0):.4f};"
-            f"att_stagger={comp.get('restagger', 0.0):.4f};"
-            f"att_tail={comp.get('duration_tail', 0.0):.4f}"
-        )
-        emit(
-            f"figS_sweep_{pol}",
-            a["violation_rate"] * 1e6,
-            f"n={a['n']};viol={a['violation_rate']:.4f};"
-            f"miss={a['task_miss_rate']:.4f};"
-            f"realloc={a['realloc_frac']:.4f};{att_str};{per_mode}",
-        )
+    emit_sweep_aggregate(aggregate_sweep(rows), "figS_sweep")

@@ -17,12 +17,13 @@ visible in CI artifacts (``BENCH_sim.json`` via ``benchmarks.run
    (fixed 6-mode Markov generator, so the workload stays comparable as
    bundled defaults evolve), the figS_scenarios fleet view.
 4. **Batched lockstep engine** — B-seed Monte-Carlo batch of one
-   pinned Markov scenario through ``run_scenario_batch`` vs the same
-   seeds through a warm scalar loop (``perf_batch_*``; bit-identity
-   between the two paths is asserted separately by
-   ``benchmarks.check_equivalence``).
+   pinned Markov scenario through ``run(spec, seeds=...)`` (lockstep
+   backend) vs the same seeds through a warm scalar loop
+   (``perf_batch_*``; bit-identity between the two paths is asserted
+   separately by ``benchmarks.check_equivalence``).
 5. **SoA jax backend** — the same pinned scenario through
-   ``run_scenario_soa`` at R=8 and R=64 (``perf_soa_*_r{8,64}``),
+   ``run(spec, seeds=..., backend="soa")`` at R=8 and R=64
+   (``perf_soa_*_r{8,64}``),
    steady-state per-run wall-clock with the jit compile reported
    separately (``check_equivalence --mode distributional`` asserts
    the statistical-equivalence side).
@@ -43,11 +44,7 @@ from repro.core.experiment import ExperimentSpec, build_stack, make_policy
 from repro.core.sim import SimConfig, Simulator
 from repro.core.sim.trace import build_skeleton, sample_trace
 from repro.scenarios import sweep
-from repro.scenarios.runner import (
-    ScenarioSpec,
-    run_scenario,
-    run_scenario_batch,
-)
+from repro.scenarios.runner import ScenarioSpec, run as run_specs
 from repro.scenarios.script import MarkovScenarioGenerator
 
 from .common import emit
@@ -231,15 +228,15 @@ def _batch_benchmark(duration: float, seed: int) -> None:
     for pol, name in (("ads_tile", "perf_batch_ads"), ("tp_driven", "perf_batch_tp")):
         spec = ScenarioSpec(scenario=scen, policy=pol)
         # warm both paths (skeleton, stack, schedule caches)
-        run_scenario_batch(spec, seeds[:2])
-        run_scenario(dataclasses.replace(spec, seed=seeds[0]))
+        run_specs(spec, seeds=seeds[:2])
+        run_specs(dataclasses.replace(spec, seed=seeds[0]))
         gc.collect()
         t0 = time.perf_counter()
         for s in seeds:
-            run_scenario(dataclasses.replace(spec, seed=s))
+            run_specs(dataclasses.replace(spec, seed=s))
         dt_scalar = time.perf_counter() - t0
         t0 = time.perf_counter()
-        run_scenario_batch(spec, seeds)
+        run_specs(spec, seeds=seeds)
         dt_batch = time.perf_counter() - t0
         _BATCH_US_PER_RUN[pol] = dt_batch / b * 1e6
         emit(
@@ -253,7 +250,8 @@ def _batch_benchmark(duration: float, seed: int) -> None:
 def _soa_benchmark(duration: float, seed: int) -> None:
     """Structure-of-arrays jax backend on the same pinned Markov
     scenario: R-seed cells at R=8 and R=64 through
-    ``run_scenario_soa``.  Each cell is measured twice — the first call
+    ``run(spec, seeds=..., backend="soa")``.  Each cell is measured
+    twice — the first call
     pays the jit compile for that (policy, R) shape, the second is the
     steady state — and ``us_per_call`` reports the *steady* per-run
     wall-clock (the regression-gated number) with the compile cost in
@@ -265,7 +263,6 @@ def _soa_benchmark(duration: float, seed: int) -> None:
     not amortize with R on one core) and where the backend does win.
     Skips (emitting nothing) when jax is unavailable."""
     from repro.core.sim.soa import soa_available
-    from repro.scenarios.runner import run_scenario_soa
 
     if not soa_available():
         print("perf_soa_*: jax unavailable, skipping SoA rows")
@@ -278,10 +275,10 @@ def _soa_benchmark(duration: float, seed: int) -> None:
             seeds = list(range(seed, seed + runs))
             gc.collect()
             t0 = time.perf_counter()
-            run_scenario_soa(spec, seeds)
+            run_specs(spec, seeds=seeds, backend="soa", fallback=False)
             dt_cold = time.perf_counter() - t0
             t0 = time.perf_counter()
-            run_scenario_soa(spec, seeds)
+            run_specs(spec, seeds=seeds, backend="soa", fallback=False)
             dt_warm = time.perf_counter() - t0
             derived = (
                 f"runs={runs};compile_s={max(dt_cold - dt_warm, 0.0):.3f};"

@@ -83,21 +83,72 @@ def _suite_worker(args: tuple) -> str:
 def _export_trace(path_str: str, duration: float, seed: int) -> None:
     """Record one rate_churn run and export a Perfetto/Chrome trace."""
     from repro.obs import TraceRecorder, export_chrome_trace
-    from repro.scenarios import ScenarioSpec, get_scenario
-    from repro.scenarios.runner import run_scenario
+    from repro.scenarios import ScenarioSpec, get_scenario, run
 
     rec = TraceRecorder()
     spec = ScenarioSpec(
         scenario=get_scenario("rate_churn"), policy="ads_tile", seed=seed,
         duration_s=max(duration, 1.0),
     )
-    report = run_scenario(spec, recorder=rec)
+    [report] = run(spec, recorders={0: rec})
     path = Path(path_str)
     path.parent.mkdir(parents=True, exist_ok=True)
     export_chrome_trace(rec, str(path))
     att = report.attribution or {}
     print(f"# wrote {path} ({len(rec)} events, "
           f"{att.get('n_late', 0)} late chains)", file=sys.stderr)
+
+
+def _run_campaign_cli(args) -> list:
+    """Run (or resume) a sweep campaign from ``--campaign`` and emit
+    its aggregate as CSV rows; returns the emitted text's rows.
+
+    ``--campaign`` takes either a campaign-spec JSON or a manifest JSON
+    written by a previous (possibly interrupted) invocation — resuming
+    is just pointing the flag at the manifest (or rerunning the same
+    spec against the same cache): cells with cached rows are not
+    re-executed.  This is the entry the weekly extended-sweep CI job
+    drives.
+    """
+    from repro.sweeps.executor import SubprocessShardExecutor
+    from repro.sweeps.service import SweepFailure, run_campaign
+
+    executor = None
+    if args.campaign_shards and args.campaign_shards > 1:
+        executor = SubprocessShardExecutor(
+            num_shards=args.campaign_shards,
+            jobs_per_shard=max(1, args.jobs),
+        )
+    try:
+        result = run_campaign(
+            args.campaign,
+            cache_dir=args.campaign_cache,
+            manifest_path=args.campaign_manifest,
+            executor=executor,
+            jobs=args.jobs if args.jobs > 1 else None,
+        )
+    except SweepFailure as exc:
+        result = exc.result
+        print(f"# campaign: {exc}", file=sys.stderr)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        from .common import emit_sweep_aggregate
+
+        emit_sweep_aggregate(result.aggregate, "campaign")
+        print(
+            f"campaign_cells,{float(result.n_cells):.3f},"
+            f"executed={result.n_executed};cached={result.n_cached};"
+            f"failed={result.n_failed}"
+        )
+    out = buf.getvalue()
+    sys.stdout.write(out)
+    print(
+        f"# campaign {result.campaign.name!r}: {result.n_cells} cells "
+        f"({result.n_cached} cached, {result.n_executed} executed, "
+        f"{result.n_failed} failed)",
+        file=sys.stderr,
+    )
+    return _rows_from_csv(out)
 
 
 def main() -> None:
@@ -116,7 +167,27 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None, metavar="FILE",
                     help="record one rate_churn run with the flight "
                          "recorder and write a Perfetto/Chrome trace JSON")
+    ap.add_argument("--campaign", default=None, metavar="FILE",
+                    help="run/resume a sweep campaign: a campaign-spec "
+                         "JSON or a manifest JSON from an earlier "
+                         "(interrupted) run (see docs/sweeps.md); "
+                         "combine with '--only none' to run it alone")
+    ap.add_argument("--campaign-cache", default=".sweep-cache",
+                    metavar="DIR",
+                    help="content-addressed result cache for --campaign "
+                         "(cells with cached rows are not re-executed)")
+    ap.add_argument("--campaign-manifest", default=None, metavar="FILE",
+                    help="write the resumable campaign manifest here "
+                         "(default: <campaign-cache>/manifest.json)")
+    ap.add_argument("--campaign-shards", type=int, default=0, metavar="N",
+                    help="fan the campaign out over N worker "
+                         "subprocesses via the manifest instead of the "
+                         "in-process pool")
     args = ap.parse_args()
+    if args.campaign and args.campaign_manifest is None:
+        args.campaign_manifest = str(
+            Path(args.campaign_cache) / "manifest.json"
+        )
 
     if args.only == "none":
         names = []
@@ -157,6 +228,10 @@ def main() -> None:
                 SUITES[name](duration=args.duration, seed=args.seed)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
+    campaign_rows = []
+    if args.campaign:
+        campaign_rows = _run_campaign_cli(args)
+
     if args.trace_out:
         _export_trace(args.trace_out, args.duration, args.seed)
 
@@ -167,7 +242,7 @@ def main() -> None:
             "suites": names,
             "duration": args.duration,
             "seed": args.seed,
-            "rows": _rows_from_csv("".join(outputs)),
+            "rows": _rows_from_csv("".join(outputs)) + campaign_rows,
             "profile": metrics.snapshot(),
         }, indent=2))
         print(f"# wrote {path}", file=sys.stderr)

@@ -9,7 +9,7 @@ from repro.scenarios import (
     ScenarioSpec,
     aggregate_sweep,
     get_scenario,
-    run_scenario,
+    run,
     sweep,
 )
 
@@ -36,7 +36,7 @@ def main() -> None:
           f"{'realloc':>8s} {'swaps':>6s}")
     for policy in ("ads_tile", "tp_driven"):
         for replan in (False, True):
-            r = run_scenario(ScenarioSpec(
+            [r] = run(ScenarioSpec(
                 scenario=scen, policy=policy, replan=replan, seed=3,
             ))
             print(f"{policy:12s} {'replan' if replan else 'pinned':8s} "

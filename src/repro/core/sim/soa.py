@@ -76,8 +76,8 @@ class SoaWindowOverflow(SoaUnsupported):
     all its successors starved.  :func:`run_problem` detects this on
     the final state planes and raises instead of returning truncated
     results; callers either widen :attr:`SoaOptions.life_pad_s` (the
-    runner's :func:`~repro.scenarios.runner.run_scenario_soa` retries
-    with a doubled window automatically) or fall back to the
+    runner's SoA path (``run(spec, seeds=..., backend="soa")``)
+    retries with a doubled window automatically) or fall back to the
     scalar/lockstep engines.
     """
 
@@ -650,7 +650,7 @@ def run_problem(
                 f"({n_lanes}/{problem.cfg.R} lanes affected): the cell "
                 "queues jobs past the E2E-deadline lifetime bound "
                 "(overload under drop_policy='soft').  Widen "
-                "SoaOptions.life_pad_s (run_scenario_soa retries with a "
+                "SoaOptions.life_pad_s (the runner's SoA path retries with a "
                 "doubled window automatically) or use the scalar/"
                 "lockstep backend for this cell."
             )

@@ -10,8 +10,10 @@ during a run.  This package makes it change:
 * :mod:`~repro.scenarios.script` — a scenario timeline DSL (ordered
   mode segments, transient bursts, sensor dropouts) plus a
   Markov-chain scenario generator;
-* :mod:`~repro.scenarios.runner` — one-call scenario experiments and
-  multiprocessing Monte-Carlo sweeps.
+* :mod:`~repro.scenarios.runner` — the :func:`run` entry point (one
+  spec, a seed fan, or a spec group, over a selectable backend) and
+  multiprocessing Monte-Carlo sweeps; :mod:`repro.sweeps` layers
+  content-addressed caching and resumable campaigns on top.
 
 The engine reacts through ``mode_change`` events and, when a policy
 carries an :class:`~repro.core.runtime.OnlineReplanner`, hot-swaps
@@ -29,14 +31,23 @@ from .script import (
     get_scenario,
 )
 from .runner import (
+    SWEEP_BACKENDS,
+    BackendRegistry,
+    ItemFailure,
     ScenarioSpec,
+    SweepBackend,
+    SweepReducer,
+    SweepRow,
     aggregate_sweep,
     build_trace,
     compile_portfolio,
     parallel_map,
+    run,
     run_scenario,
     run_scenario_batch,
+    run_scenario_group,
     run_scenario_soa,
+    soa_usable,
     summarize,
     sweep,
 )
@@ -55,14 +66,23 @@ __all__ = [
     "SensorDropout",
     "default_generator",
     "get_scenario",
+    "SWEEP_BACKENDS",
+    "BackendRegistry",
+    "ItemFailure",
     "ScenarioSpec",
+    "SweepBackend",
+    "SweepReducer",
+    "SweepRow",
     "aggregate_sweep",
     "build_trace",
     "compile_portfolio",
     "parallel_map",
+    "run",
     "run_scenario",
     "run_scenario_batch",
+    "run_scenario_group",
     "run_scenario_soa",
+    "soa_usable",
     "summarize",
     "sweep",
 ]

@@ -1,27 +1,33 @@
-"""Scenario experiment runner + multiprocessing Monte-Carlo sweeps.
+"""Scenario experiment runner: one dispatching entry point + sweeps.
 
-``run_scenario`` is the one-call entry point for a single drive: build
-the benchmark workflow, compile the GHA schedule for the scenario's
-*initial* mode, optionally precompile a per-mode schedule portfolio for
-online replanning, and run Tile-stream with the scenario attached.
+:func:`run` is the single entry point for scenario simulation.  It owns
+backend selection (the scalar reference engine, the bit-identical
+batched lockstep engine, the distributional SoA jax backend) and the
+per-spec fallback policy, replacing the four historical entry points —
+``run_scenario`` / ``run_scenario_batch`` / ``run_scenario_soa`` /
+``run_scenario_group`` — which remain importable as thin deprecated
+shims for one more release (each delegates to :func:`run` and emits a
+``DeprecationWarning``).
 
 ``sweep`` is the fleet-scale view: ``N`` Markov-sampled scenarios x
 policies, fanned out over a process pool with deterministic
-per-scenario seeds, aggregated into per-policy and per-mode tables.
+per-scenario seeds, aggregated into per-policy and per-mode tables
+(streaming form: :class:`repro.sweeps.SweepReducer`).  Passing
+``cache_dir=`` routes the sweep through the campaign service
+(:mod:`repro.sweeps.service`): rows become content-addressed cache
+entries and repeated sweeps only execute new cells.
+
 The pool utility :func:`parallel_map` is generic (the benchmark harness
-reuses it for ``--jobs``).
+reuses it for ``--jobs``) and is now a thin wrapper over
+:class:`repro.sweeps.LocalPoolExecutor`.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import math
-import multiprocessing
-import os
 import warnings
-from typing import Callable, Dict, List, Mapping, Optional, Sequence
-
-import numpy as np
+from collections import abc as _abc
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from ..core.experiment import ExperimentSpec, build_stack, make_policy
 from ..core.runtime import (
@@ -33,27 +39,33 @@ from ..core.sim import SimConfig, Simulator, SimReport
 from ..core.sim.batch import LaneSimulator, run_batch, sample_trace_batch
 from ..core.sim.trace import Trace, build_skeleton, sample_trace
 from ..obs import TraceRecorder, attribution_report
+from ..sweeps.executor import ItemFailure, LocalPoolExecutor
+from ..sweeps.reduce import SweepReducer
+from ..sweeps.rows import SweepRow
 from .modes import get_mode, register_mode
 from .script import MarkovScenarioGenerator, ScenarioScript, default_generator
 
 __all__ = [
     "ScenarioSpec",
+    "SweepBackend",
+    "BackendRegistry",
+    "SWEEP_BACKENDS",
     "compile_portfolio",
     "build_trace",
+    "run",
+    "soa_usable",
     "run_scenario",
     "run_scenario_batch",
     "run_scenario_group",
     "run_scenario_soa",
     "parallel_map",
+    "ItemFailure",
+    "summarize",
+    "SweepRow",
+    "SweepReducer",
     "sweep",
     "aggregate_sweep",
-    "SWEEP_BACKENDS",
 ]
-
-#: engines ``sweep()``/``_run_group`` can route a scenario group
-#: through.  "scalar" and "lockstep" are bit-identical to each other;
-#: "soa" is distributionally equivalent (see docs/performance.md).
-SWEEP_BACKENDS = ("scalar", "lockstep", "soa")
 
 
 @dataclasses.dataclass
@@ -107,7 +119,7 @@ class ScenarioSpec(ExperimentSpec):
     #: attach a flight recorder (:mod:`repro.obs`) to the run: the
     #: report gains a ``attribution`` section (deadline-miss
     #: decomposition) and the recorder itself is reachable through
-    #: ``run_scenario``'s ``recorder=`` argument for trace export.
+    #: ``run``'s ``recorders=`` argument for trace export.
     #: Off by default — recording a sweep costs memory per run.
     record: bool = False
 
@@ -121,6 +133,146 @@ class ScenarioSpec(ExperimentSpec):
             )
 
 
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+def soa_usable(spec: "ScenarioSpec") -> Tuple[bool, str]:
+    """Whether the SoA jax backend can run ``spec`` (and why not).
+
+    The single place availability + per-spec support are decided: the
+    :func:`run` dispatcher, ``sweep``'s group runner, and the campaign
+    service all consult this instead of re-deriving the check.
+    """
+    from ..core.sim import soa
+
+    if not soa.soa_available():
+        return False, "jax is not available"
+    if not soa.soa_supported(
+        spec.policy, spec.replan_mode, spec.detection_delay_s,
+        spec.drop_policy, spec.record,
+    ):
+        return (
+            False,
+            f"spec (policy={spec.policy!r}, replan_mode={spec.replan_mode!r}, "
+            f"record={spec.record}) is outside the SoA support set",
+        )
+    return True, ""
+
+
+def _soa_available() -> bool:
+    from ..core.sim import soa
+
+    return soa.soa_available()
+
+
+def _always_available() -> bool:
+    return True
+
+
+def _always_supported(_spec) -> Tuple[bool, str]:
+    return True, ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepBackend:
+    """Capability metadata for one simulation engine.
+
+    ``kind`` is the equivalence contract: ``"exact"`` backends produce
+    bit-identical reports to each other (the batch-equivalence CI gate
+    pins this), ``"distributional"`` ones agree statistically (KS /
+    CI-overlap gates).  The sweep cache keys cells by this contract,
+    not by backend name — see ``repro.sweeps.cellkey``.
+    """
+
+    name: str
+    #: "exact" | "distributional"
+    kind: str
+    #: runs many lanes in one call (seed fans / scenario groups)
+    batched: bool
+    description: str
+    #: process-wide availability (e.g. optional jax dependency)
+    is_available: Callable[[], bool] = _always_available
+    #: per-spec support: ``(ok, reason_if_not)``
+    supports: Callable[[object], Tuple[bool, str]] = _always_supported
+
+
+class BackendRegistry(_abc.Mapping):
+    """Name -> :class:`SweepBackend` mapping.
+
+    Iterates over *names* (and ``repr``\\ s as the name tuple), so code
+    and error messages written against the old ``SWEEP_BACKENDS``
+    string tuple keep working; lookups return the full capability
+    record.
+    """
+
+    def __init__(self, *backends: SweepBackend) -> None:
+        self._by_name: Dict[str, SweepBackend] = {}
+        for b in backends:
+            self.register(b)
+
+    def register(self, backend: SweepBackend, overwrite: bool = False) -> SweepBackend:
+        if backend.name in self._by_name and not overwrite:
+            raise ValueError(f"backend {backend.name!r} already registered")
+        if backend.kind not in ("exact", "distributional"):
+            raise ValueError(f"unknown backend kind {backend.kind!r}")
+        self._by_name[backend.name] = backend
+        return backend
+
+    def __getitem__(self, name: str) -> SweepBackend:
+        return self._by_name[name]
+
+    def __iter__(self):
+        return iter(self._by_name)
+
+    def __len__(self) -> int:
+        return len(self._by_name)
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._by_name)
+
+    def __repr__(self) -> str:
+        return repr(self.names())
+
+
+#: engines :func:`run`/``sweep`` can route work through, with their
+#: capability metadata.  "scalar" and "lockstep" are bit-identical to
+#: each other; "soa" is distributionally equivalent (see
+#: docs/performance.md).  Iterating yields names, so the old
+#: string-tuple idioms (``backend in SWEEP_BACKENDS``) still hold.
+SWEEP_BACKENDS = BackendRegistry(
+    SweepBackend(
+        name="scalar", kind="exact", batched=False,
+        description="per-event reference engine, one run at a time",
+    ),
+    SweepBackend(
+        name="lockstep", kind="exact", batched=True,
+        description=(
+            "batched lockstep engine; per-lane reports bit-identical "
+            "to scalar (CI-gated)"
+        ),
+    ),
+    SweepBackend(
+        name="soa", kind="distributional", batched=True,
+        description=(
+            "structure-of-arrays jax backend; distributionally "
+            "equivalent, profitable for many seeds of one cell"
+        ),
+        is_available=_soa_available,
+        supports=soa_usable,
+    ),
+)
+
+
+def _check_backend(backend: str, *, allow_auto: bool = False) -> None:
+    if backend in SWEEP_BACKENDS or (allow_auto and backend == "auto"):
+        return
+    choices = (("auto",) if allow_auto else ()) + SWEEP_BACKENDS.names()
+    raise ValueError(f"unknown backend {backend!r} (choose from {choices})")
+
+
+# ---------------------------------------------------------------------------
+# compilation / trace helpers
+# ---------------------------------------------------------------------------
 def compile_portfolio(
     spec: ScenarioSpec, modes: Optional[Sequence[str]] = None, **autotune_kw
 ) -> SchedulePortfolio:
@@ -142,11 +294,11 @@ def compile_portfolio(
 def build_trace(spec: ScenarioSpec) -> Trace:
     """Sample the full randomness of one scenario run up front.
 
-    The result can be passed to :func:`run_scenario` for every policy /
-    replan variant of the same ``(scenario, seed, workload)`` — the
-    draws are policy-independent under the engine's counter-based
-    stream contract, so sharing a trace changes nothing about the
-    results and only removes the redundant sampling work.
+    The result can be passed to :func:`run` for every policy / replan
+    variant of the same ``(scenario, seed, workload)`` — the draws are
+    policy-independent under the engine's counter-based stream
+    contract, so sharing a trace changes nothing about the results and
+    only removes the redundant sampling work.
     """
     wf, _hw, model, _compiler = build_stack(spec)
     scen = spec.scenario
@@ -155,40 +307,10 @@ def build_trace(spec: ScenarioSpec) -> Trace:
     return sample_trace(skel, model, scen, spec.seed)
 
 
-def run_scenario(
-    spec: ScenarioSpec,
-    trace: Optional[Trace] = None,
-    recorder: Optional[TraceRecorder] = None,
-) -> SimReport:
-    """Run one scenario end-to-end and return its :class:`SimReport`.
-
-    ``trace`` optionally injects presampled randomness (see
-    :func:`build_trace`); ``None`` samples inside the engine.
-
-    ``recorder`` attaches a caller-owned flight recorder (so the caller
-    can export the trace afterwards); ``spec.record`` makes the runner
-    create an internal one.  Either way the report's ``attribution``
-    field is filled with the run's deadline-miss decomposition.
-    """
-    wf, model, sched, portfolio = _prepare_run(spec)
-    policy = _make_run_policy(spec, portfolio)
-    rec = recorder
-    if rec is None and spec.record:
-        rec = TraceRecorder()
-    sim = Simulator(
-        wf, model, sched, policy, _sim_config(spec, trace, rec),
-    )
-    report = sim.run()
-    if rec is not None:
-        report.attribution = attribution_report(sim, rec)
-    return report
-
-
 def _prepare_run(spec: ScenarioSpec):
-    """The per-run setup of :func:`run_scenario`: mode registration,
-    workload stack, and the offline schedule portfolio.  Shared with
-    the batched entry points so a batched lane is constructed exactly
-    like a scalar run."""
+    """The per-run setup shared by every backend: mode registration,
+    workload stack, and the offline schedule portfolio — so a batched
+    lane is constructed exactly like a scalar run."""
     if spec.mode_defs:
         # idempotent in the parent; in a spawn worker this restores
         # custom modes the fresh registry does not have
@@ -254,26 +376,48 @@ def _sim_config(
     )
 
 
-def run_scenario_batch(
+# ---------------------------------------------------------------------------
+# backend implementations (private; dispatch through run())
+# ---------------------------------------------------------------------------
+def _run_single(
+    spec: ScenarioSpec,
+    trace: Optional[Trace] = None,
+    recorder: Optional[TraceRecorder] = None,
+) -> SimReport:
+    """Scalar reference engine: one scenario end-to-end."""
+    wf, model, sched, portfolio = _prepare_run(spec)
+    policy = _make_run_policy(spec, portfolio)
+    rec = recorder
+    if rec is None and spec.record:
+        rec = TraceRecorder()
+    sim = Simulator(
+        wf, model, sched, policy, _sim_config(spec, trace, rec),
+    )
+    report = sim.run()
+    if rec is not None:
+        report.attribution = attribution_report(sim, rec)
+    return report
+
+
+def _run_lockstep_seeds(
     spec: ScenarioSpec,
     seeds: Sequence[int],
     recorders: Optional[Mapping[int, TraceRecorder]] = None,
 ) -> List[SimReport]:
-    """Run ``len(seeds)`` Monte-Carlo drives of one spec through the
-    batched lockstep engine and return one report per seed.
+    """Lockstep engine, seed fan: ``len(seeds)`` Monte-Carlo drives of
+    one spec as lanes of one batch.
 
-    Each lane's report is bit-identical to
-    ``run_scenario(replace(spec, seed=s))`` — the stack/portfolio setup
-    is shared, the stream-contract trace is batch-materialized once
+    Each lane's report is bit-identical to the scalar engine run with
+    that seed — the stack/portfolio setup is shared, the
+    stream-contract trace is batch-materialized once
     (:func:`~repro.core.sim.batch.sample_trace_batch`) and the lanes
     advance in lockstep (:func:`~repro.core.sim.batch.run_batch`).
 
-    ``recorders`` optionally attaches a flight recorder to individual
-    lanes by seed *index* — a recorded lane de-batches to the scalar
-    per-lane driver (recorder hooks live on the engine paths the fused
-    loop elides) but stays inside the lockstep loop, and its report
-    gains the usual ``attribution`` section.  ``spec.record`` attaches
-    one to every lane.
+    ``recorders`` attaches flight recorders to individual lanes by seed
+    *index* — a recorded lane de-batches to the scalar per-lane driver
+    (recorder hooks live on the engine paths the fused loop elides) but
+    stays inside the lockstep loop; ``spec.record`` attaches one to
+    every lane.
     """
     wf, model, sched, portfolio = _prepare_run(spec)
     scen = spec.scenario
@@ -300,51 +444,69 @@ def run_scenario_batch(
     return reports
 
 
+def _run_lockstep_group(
+    specs: Sequence[ScenarioSpec],
+    trace: Optional[Trace] = None,
+    recorders: Optional[Mapping[int, TraceRecorder]] = None,
+) -> List[SimReport]:
+    """Lockstep engine, policy group: several specs sharing (scenario,
+    seed, workload), differing in policy/replan, as lanes of one batch
+    sharing ``trace``.
+
+    Reports are bit-identical to the scalar engine per spec; this is
+    the batched path under :func:`sweep`.
+    """
+    sims: List[LaneSimulator] = []
+    recs: List[Optional[TraceRecorder]] = []
+    for i, spec in enumerate(specs):
+        wf, model, sched, portfolio = _prepare_run(spec)
+        rec = recorders.get(i) if recorders is not None else None
+        if rec is None and spec.record:
+            rec = TraceRecorder()
+        sims.append(LaneSimulator(
+            wf, model, sched, _make_run_policy(spec, portfolio),
+            _sim_config(spec, trace, rec),
+        ))
+        recs.append(rec)
+    reports = run_batch(sims)
+    for sim, rec, report in zip(sims, recs, reports):
+        if rec is not None:
+            report.attribution = attribution_report(sim, rec)
+    return reports
+
+
 #: per-process memo of SoA window pads that proved necessary, keyed by
-#: (skeleton key, policy, drop policy, duration) — see run_scenario_soa
+#: (skeleton key, policy, drop policy, duration) — see _run_soa
 _SOA_LIFE_PAD_HINT: Dict[tuple, float] = {}
 
 
-def run_scenario_soa(
+def _run_soa(
     spec: ScenarioSpec,
     seeds: Sequence[int],
     options=None,
 ) -> List[SimReport]:
-    """Run ``len(seeds)`` Monte-Carlo drives of one spec through the
-    structure-of-arrays jax backend and return one report per seed.
+    """Structure-of-arrays jax backend, seed fan.
 
-    Unlike :func:`run_scenario_batch` (bit-identical lockstep lanes),
-    the SoA backend advances all lanes as jnp arrays through discrete
-    scheduling rounds: reports agree with the scalar engine
-    *distributionally* (KS on chain latencies, CI overlap on summary
-    rates) and *exactly* on structural invariants, but individual
-    event timestamps differ at the round granularity — see
-    ``docs/performance.md#soa-backend`` for the contract and for when
-    this backend is profitable (many seeds of one scenario cell, e.g.
-    tail estimation; the jit compile is amortized across lanes but
-    repaid on every new scenario shape).
+    Unlike the lockstep engine (bit-identical lanes), the SoA backend
+    advances all lanes as jnp arrays through discrete scheduling
+    rounds: reports agree with the scalar engine *distributionally*
+    (KS on chain latencies, CI overlap on summary rates) and *exactly*
+    on structural invariants, but individual event timestamps differ
+    at the round granularity — see ``docs/performance.md#soa-backend``
+    for the contract and for when this backend is profitable (many
+    seeds of one scenario cell, e.g. tail estimation; the jit compile
+    is amortized across lanes but repaid on every new scenario shape).
 
     Raises :class:`repro.core.sim.soa.SoaUnsupported` when jax is
     missing or the spec needs features outside the kernel's support
-    set (predictive replanning, recorders, non-paper policies);
-    callers wanting a silent fallback should check
-    ``soa.soa_available()`` / ``soa.soa_supported(...)`` first.
+    set; :func:`run` consults :func:`soa_usable` first and owns the
+    fallback decision.
     """
     from ..core.sim import soa
 
-    if not soa.soa_available():
-        raise soa.SoaUnsupported("jax is not available; use run_scenario_batch")
-    if not soa.soa_supported(
-        spec.policy,
-        spec.replan_mode,
-        spec.detection_delay_s,
-        spec.drop_policy,
-        spec.record,
-    ):
-        raise soa.SoaUnsupported(
-            f"spec (policy={spec.policy!r}, replan_mode={spec.replan_mode!r}, "
-            f"record={spec.record}) is outside the SoA support set"
-        )
+    ok, why = soa_usable(spec)
+    if not ok:
+        raise soa.SoaUnsupported(why)
     wf, model, sched, portfolio = _prepare_run(spec)
     scen = spec.scenario
     duration = scen.duration_s if spec.duration_s is None else spec.duration_s
@@ -396,114 +558,298 @@ def run_scenario_soa(
             return reports
 
 
+# ---------------------------------------------------------------------------
+# the entry point
+# ---------------------------------------------------------------------------
+def run(
+    specs: Union[ScenarioSpec, Sequence[ScenarioSpec]],
+    *,
+    seeds: Optional[Sequence[int]] = None,
+    backend: str = "auto",
+    trace: Optional[Trace] = None,
+    recorders: Optional[Mapping[int, TraceRecorder]] = None,
+    options=None,
+    fallback: bool = True,
+) -> List[SimReport]:
+    """Run scenario simulations; always returns one report per run.
+
+    The one entry point over every engine.  Three call shapes:
+
+    * ``run(spec)`` — a single drive (``run(spec)[0]`` is the report);
+    * ``run(spec, seeds=[...])`` — a Monte-Carlo *seed fan* of one
+      spec, one report per seed;
+    * ``run([spec_a, spec_b, ...])`` — a *group* of specs (typically
+      one scenario+seed across policies), one report per spec, in
+      order.
+
+    ``backend`` selects the engine (see :data:`SWEEP_BACKENDS`):
+
+    * ``"auto"`` (default) — deterministic best choice: the scalar
+      reference engine for a single run, the bit-identical lockstep
+      engine for seed fans, and for groups the lockstep engine over
+      maximal sub-groups that can share a trace (same scenario, seed
+      and workload), sampling each shared trace once.  Never picks the
+      SoA backend — its rows are only distributionally equivalent, so
+      it must be asked for by name.
+    * ``"scalar"`` / ``"lockstep"`` — force that exact-family engine.
+    * ``"soa"`` — the distributional jax backend.  Specs it cannot run
+      (unavailable jax, unsupported feature, attached recorder) fall
+      back to an exact engine when ``fallback=True`` (the sweep
+      default) or raise ``SoaUnsupported`` when ``fallback=False``.
+
+    ``trace`` injects presampled randomness (:func:`build_trace`) into
+    exact-engine runs; a group sharing one trace must share (scenario,
+    seed, workload).  Incompatible with ``seeds=`` (a trace carries
+    one seed's draws) and with the SoA backend (it materializes its
+    own device-resident trace batch).
+
+    ``recorders`` maps run index (seed index for fans, spec index for
+    groups, ``0`` for a single spec) to a caller-owned
+    :class:`~repro.obs.TraceRecorder`; ``spec.record`` instead attaches
+    an internal one to every run.  Either way recorded reports carry an
+    ``attribution`` section.
+
+    ``options`` passes :class:`~repro.core.sim.soa.SoaOptions` through
+    to the SoA backend (SoA-only).
+    """
+    single = isinstance(specs, ScenarioSpec)
+    spec_list: List[ScenarioSpec] = [specs] if single else list(specs)
+    _check_backend(backend, allow_auto=True)
+    if not spec_list:
+        return []
+    if options is not None and backend != "soa":
+        raise ValueError("options= configures the SoA backend; pass backend='soa'")
+    if seeds is not None:
+        if not single:
+            raise ValueError(
+                "seeds= fans one spec over Monte-Carlo seeds; pass a "
+                "single spec (a list of specs is a group, one run each)"
+            )
+        if trace is not None:
+            raise ValueError(
+                "trace= carries one seed's presampled draws; it cannot "
+                "be combined with seeds= (the engine batch-materializes "
+                "the fan's traces itself)"
+            )
+        return _dispatch_seed_fan(
+            spec_list[0], list(seeds), backend, recorders, options, fallback,
+        )
+    return _dispatch_group(spec_list, backend, trace, recorders, options, fallback)
+
+
+def _dispatch_seed_fan(
+    spec: ScenarioSpec,
+    seeds: List[int],
+    backend: str,
+    recorders: Optional[Mapping[int, TraceRecorder]],
+    options,
+    fallback: bool,
+) -> List[SimReport]:
+    if backend == "soa":
+        ok, why = soa_usable(spec)
+        if ok and recorders:
+            ok, why = False, "recorders need engine hooks the SoA kernel elides"
+        if ok:
+            return _run_soa(spec, seeds, options)
+        if not fallback:
+            from ..core.sim import soa
+
+            raise soa.SoaUnsupported(why)
+        return _run_lockstep_seeds(spec, seeds, recorders)
+    if backend == "scalar":
+        out: List[SimReport] = []
+        for k, s in enumerate(seeds):
+            rec = recorders.get(k) if recorders is not None else None
+            out.append(
+                _run_single(dataclasses.replace(spec, seed=int(s)), None, rec)
+            )
+        return out
+    # auto / lockstep: the batched exact engine is the right default
+    return _run_lockstep_seeds(spec, seeds, recorders)
+
+
+def _dispatch_group(
+    spec_list: List[ScenarioSpec],
+    backend: str,
+    trace: Optional[Trace],
+    recorders: Optional[Mapping[int, TraceRecorder]],
+    options,
+    fallback: bool,
+) -> List[SimReport]:
+    recorders = recorders or {}
+    if backend == "soa":
+        if trace is not None:
+            raise ValueError(
+                "the SoA backend materializes its own device trace; "
+                "trace= is only valid for exact backends"
+            )
+        out: List[SimReport] = []
+        for i, spec in enumerate(spec_list):
+            rec = recorders.get(i)
+            ok, why = soa_usable(spec)
+            if ok and rec is not None:
+                ok, why = False, "recorders need engine hooks the SoA kernel elides"
+            if ok:
+                out.append(_run_soa(spec, [spec.seed], options)[0])
+            elif fallback:
+                out.append(_run_single(spec, None, rec))
+            else:
+                from ..core.sim import soa
+
+                raise soa.SoaUnsupported(why)
+        return out
+    if backend == "lockstep":
+        return _run_lockstep_group(spec_list, trace, recorders or None)
+    if backend == "scalar":
+        return [
+            _run_single(s, trace, recorders.get(i))
+            for i, s in enumerate(spec_list)
+        ]
+    # auto
+    if len(spec_list) == 1:
+        return [_run_single(spec_list[0], trace, recorders.get(0))]
+    if trace is not None:
+        # the caller vouches the group shares the trace's (scenario,
+        # seed, workload) — the batch engine's skeleton guard backstops
+        return _run_lockstep_group(spec_list, trace, recorders or None)
+    out2: List[Optional[SimReport]] = [None] * len(spec_list)
+    for idxs in _auto_groups(spec_list):
+        if len(idxs) == 1:
+            i = idxs[0]
+            out2[i] = _run_single(spec_list[i], None, recorders.get(i))
+        else:
+            sub = [spec_list[i] for i in idxs]
+            shared = build_trace(sub[0])
+            sub_recs = {
+                j: recorders[i]
+                for j, i in enumerate(idxs) if i in recorders
+            }
+            reports = _run_lockstep_group(sub, shared, sub_recs or None)
+            for j, i in enumerate(idxs):
+                out2[i] = reports[j]
+    return out2  # type: ignore[return-value]
+
+
+#: ExperimentSpec/ScenarioSpec fields that shape the sampled trace and
+#: skeleton; specs agreeing on all of them (plus scenario and seed) can
+#: share one trace as lockstep lanes.  Policy/replan fields are absent
+#: on purpose — draws are policy-independent (counter-based streams).
+_TRACE_FIELDS = (
+    "seed", "duration_s", "tiles", "cockpit_replicas", "load_factor",
+    "deadline_s", "q", "num_partitions", "p99_ratio", "dram_utilization",
+    "drop_policy",
+)
+
+
+def _auto_groups(spec_list: Sequence[ScenarioSpec]) -> List[List[int]]:
+    """Partition specs into trace-sharing groups (order-stable)."""
+    groups: Dict[tuple, List[int]] = {}
+    for i, spec in enumerate(spec_list):
+        key = (
+            spec.scenario.cache_token(),
+            spec.scenario.profile_token(),
+            tuple(getattr(spec, f) for f in _TRACE_FIELDS),
+        )
+        groups.setdefault(key, []).append(i)
+    return list(groups.values())
+
+
+# ---------------------------------------------------------------------------
+# deprecated entry-point shims (one release; then removed)
+# ---------------------------------------------------------------------------
+def _warn_deprecated(old: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.scenarios.runner.{old} is deprecated and will be removed "
+        f"in the next release; call repro.scenarios.run({repl}) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def run_scenario(
+    spec: ScenarioSpec,
+    trace: Optional[Trace] = None,
+    recorder: Optional[TraceRecorder] = None,
+) -> SimReport:
+    """Deprecated: use ``run(spec)[0]`` (scalar single-run shape)."""
+    _warn_deprecated("run_scenario", "spec, trace=..., recorders={0: ...}")
+    recs = None if recorder is None else {0: recorder}
+    return run(spec, trace=trace, recorders=recs, backend="scalar")[0]
+
+
+def run_scenario_batch(
+    spec: ScenarioSpec,
+    seeds: Sequence[int],
+    recorders: Optional[Mapping[int, TraceRecorder]] = None,
+) -> List[SimReport]:
+    """Deprecated: use ``run(spec, seeds=..., backend="lockstep")``."""
+    _warn_deprecated("run_scenario_batch", 'spec, seeds=..., backend="lockstep"')
+    return run(spec, seeds=seeds, backend="lockstep", recorders=recorders)
+
+
+def run_scenario_soa(
+    spec: ScenarioSpec,
+    seeds: Sequence[int],
+    options=None,
+) -> List[SimReport]:
+    """Deprecated: use ``run(spec, seeds=..., backend="soa",
+    fallback=False)`` (the shim keeps the historical raise-don't-fall-
+    back contract)."""
+    _warn_deprecated(
+        "run_scenario_soa", 'spec, seeds=..., backend="soa", fallback=False'
+    )
+    return run(spec, seeds=seeds, backend="soa", options=options, fallback=False)
+
+
 def run_scenario_group(
     specs: Sequence[ScenarioSpec], trace: Optional[Trace] = None,
 ) -> List[SimReport]:
-    """Run one *group* — several specs sharing (scenario, seed,
-    workload), differing in policy/replan — as lanes of one lockstep
-    batch, sharing ``trace`` exactly like the scalar group runner.
-
-    Reports are bit-identical to ``run_scenario(spec, trace=trace)``
-    per spec; this is the batched path under :func:`sweep`.
-    """
-    sims: List[LaneSimulator] = []
-    recs: List[Optional[TraceRecorder]] = []
-    for spec in specs:
-        wf, model, sched, portfolio = _prepare_run(spec)
-        rec = TraceRecorder() if spec.record else None
-        sims.append(LaneSimulator(
-            wf, model, sched, _make_run_policy(spec, portfolio),
-            _sim_config(spec, trace, rec),
-        ))
-        recs.append(rec)
-    reports = run_batch(sims)
-    for sim, rec, report in zip(sims, recs, reports):
-        if rec is not None:
-            report.attribution = attribution_report(sim, rec)
-    return reports
+    """Deprecated: use ``run(specs, trace=..., backend="lockstep")``."""
+    _warn_deprecated("run_scenario_group", 'specs, trace=..., backend="lockstep"')
+    return run(list(specs), trace=trace, backend="lockstep")
 
 
 # ---------------------------------------------------------------------------
 # process-pool utility (reused by benchmarks/run.py --jobs)
 # ---------------------------------------------------------------------------
 def parallel_map(
-    fn: Callable, items: Sequence, jobs: Optional[int] = None
+    fn: Callable,
+    items: Sequence,
+    jobs: Optional[int] = None,
+    *,
+    return_errors: bool = False,
 ) -> List:
     """``[fn(x) for x in items]``, fanned out over ``jobs`` processes.
 
-    Order is preserved.  ``jobs`` <= 1 (or a single item) degrades to a
-    plain in-process loop; ``jobs=None`` uses the CPU count capped at
-    the number of items.  Uses the ``spawn`` start method — fork after
-    JAX initialisation is unsafe — so ``fn`` and every item must be
-    picklable (module-level functions and frozen dataclasses are).
+    Thin wrapper over :class:`repro.sweeps.LocalPoolExecutor` (which
+    keeps the historical semantics: order preserved, ``spawn`` start
+    method — fork after JAX initialisation is unsafe — ``jobs=None``
+    uses the CPU count capped at the number of items, ``jobs`` <= 1 or
+    a single item degrades to a plain in-process loop, so ``fn`` and
+    every item must be picklable).
+
+    Error handling is per-item: a failing item no longer aborts the
+    pool mid-pass and discards its siblings' completed results.  With
+    ``return_errors=True`` failures come back in place as
+    :class:`~repro.sweeps.ItemFailure` entries; otherwise the first
+    failure's original exception re-raises after the full pass.
     """
-    if jobs is None:
-        jobs = os.cpu_count() or 1
-    jobs = min(jobs, len(items))
-    if multiprocessing.current_process().daemon:
-        # already inside a pool worker (e.g. a sweep launched by
-        # ``benchmarks.run --jobs``): daemonic processes cannot spawn
-        # children, so degrade to the in-process loop
-        jobs = 1
-    if jobs <= 1 or len(items) <= 1:
-        return [fn(x) for x in items]
-    ctx = multiprocessing.get_context("spawn")
-    with ctx.Pool(processes=jobs) as pool:
-        return pool.map(fn, items)
+    return LocalPoolExecutor(jobs).map(fn, items, return_errors=return_errors)
 
 
 # ---------------------------------------------------------------------------
 # Monte-Carlo sweeps
 # ---------------------------------------------------------------------------
 def summarize(spec: ScenarioSpec, report: SimReport) -> Dict[str, object]:
-    """Flatten one run into a picklable summary row."""
-    fc = report.forecast
-    return {
-        "scenario": spec.scenario.name,
-        "script": spec.scenario.to_string(),
-        "policy": spec.policy,
-        "replan": spec.replan,
-        "replan_mode": spec.replan_mode,
-        "seed": spec.seed,
-        "forecast": None if fc is None else {
-            "n_forecasts": fc.n_forecasts,
-            "n_preswaps": fc.n_preswaps,
-            "n_blends": fc.n_blends,
-            "n_hits": fc.n_hits,
-            "n_misses": fc.n_misses,
-            "n_reverts": fc.n_reverts,
-            "hit_rate": fc.hit_rate,
-            "prestage_stall_s": fc.prestage_stall_s,
-        },
-        "violation_rate": report.violation_rate,
-        "task_miss_rate": report.task_miss_rate,
-        "effective_frac": report.effective_frac,
-        "realloc_frac": report.realloc_frac,
-        "n_realloc": report.n_realloc,
-        "n_mode_switches": report.n_mode_switches,
-        "tiles_used": report.tiles_used,
-        "tiles_reserved_mean": report.tiles_reserved_mean,
-        "target_miss": spec.target_miss,
-        # deadline-miss decomposition (recorded runs only, else None)
-        "attribution": report.attribution,
-        "per_mode": {
-            m: {
-                "span_s": s.span_s,
-                "n_completed": s.n_completed,
-                "n_violations": s.n_violations,
-                "violation_rate": s.violation_rate,
-                # None rather than NaN: NaN breaks row equality and JSON
-                "p99_s": None if math.isnan(s.p99_s) else s.p99_s,
-                "effective_frac": s.effective_frac,
-                "realloc_frac": s.realloc_frac,
-            }
-            for m, s in report.mode_stats.items()
-        },
-    }
+    """Flatten one run into a picklable summary row — the dict form of
+    :class:`repro.sweeps.SweepRow` (``SweepRow.from_report`` is the
+    typed equivalent; this wrapper keeps the historical dict shape that
+    committed benchmark JSON and the result cache store)."""
+    return SweepRow.from_report(spec, report).to_dict()
 
 
 def _run_one(spec: ScenarioSpec) -> Dict[str, object]:
-    return summarize(spec, run_scenario(spec))
+    return summarize(spec, _run_single(spec))
 
 
 def _run_group(
@@ -518,42 +864,30 @@ def _run_group(
 
     ``backend`` selects the engine (see :data:`SWEEP_BACKENDS`):
 
-    * ``"lockstep"`` (default) — several specs route through the
-      batched lockstep engine (:func:`run_scenario_group`); per-lane
+    * ``"lockstep"`` (default) — the batched lockstep engine; per-lane
       reports are bit-identical to the scalar path (the
       ``batch-equivalence`` CI gate pins this), so sweep rows are
       unchanged.
     * ``"scalar"`` — the per-event reference engine, one spec at a
-      time (still sharing the group's sampled trace).
+      time.
     * ``"soa"`` — the structure-of-arrays jax backend.  Rows are
       distributionally (not bitwise) equivalent to the other two.  A
       sweep group holds *one* seed per scenario, which is the SoA
       backend's worst shape (the jit compile cache only pays off
       across many seeds of one skeleton), so this selector exists for
       apples-to-apples validation sweeps; throughput work should call
-      :func:`run_scenario_soa` with many seeds per cell instead.
-      Specs outside the SoA support set fall back to the scalar
-      engine, mirroring the lockstep engine's per-lane fallback.
+      ``run(spec, seeds=..., backend="soa")`` with many seeds per cell
+      instead.  Specs outside the SoA support set fall back to the
+      scalar engine, mirroring the lockstep engine's per-lane fallback.
     """
-    if backend not in SWEEP_BACKENDS:
-        raise ValueError(f"unknown backend {backend!r} (choose from {SWEEP_BACKENDS})")
+    _check_backend(backend)
     if backend == "soa":
-        from ..core.sim import soa
-
-        rows = []
-        for s in specs:
-            if soa.soa_available() and soa.soa_supported(
-                s.policy, s.replan_mode, s.detection_delay_s,
-                s.drop_policy, s.record,
-            ):
-                rows.append(summarize(s, run_scenario_soa(s, [s.seed])[0]))
-            else:
-                rows.append(summarize(s, run_scenario(s)))
-        return rows
+        reports = run(list(specs), backend="soa", fallback=True)
+        return [summarize(s, r) for s, r in zip(specs, reports)]
     if len(specs) <= 1 or backend == "scalar":
-        return [summarize(s, run_scenario(s)) for s in specs]
+        return [summarize(s, _run_single(s)) for s in specs]
     trace = build_trace(specs[0])
-    reports = run_scenario_group(specs, trace=trace)
+    reports = _run_lockstep_group(specs, trace)
     return [summarize(s, r) for s, r in zip(specs, reports)]
 
 
@@ -566,6 +900,8 @@ def sweep(
     generator: Optional[MarkovScenarioGenerator] = None,
     replan: bool = True,
     backend: str = "lockstep",
+    cache_dir=None,
+    manifest_path=None,
     **spec_kw,
 ) -> List[Dict[str, object]]:
     """Monte-Carlo sweep: ``n_scenarios`` Markov drives x ``policies``.
@@ -581,9 +917,37 @@ def sweep(
     ``"lockstep"`` (default, bit-identical rows), ``"scalar"``
     (reference engine), or ``"soa"`` (distributionally-equivalent jax
     backend; per-scenario jit compiles make it the validation shape
-    here, not the throughput shape — use :func:`run_scenario_soa`
-    directly for many-seed cells).
+    here, not the throughput shape — use ``run(spec, seeds=...,
+    backend="soa")`` directly for many-seed cells).
+
+    ``cache_dir`` routes the sweep through the campaign service
+    (:func:`repro.sweeps.run_campaign`): rows are stored
+    content-addressed on disk, so an identical repeat sweep executes
+    zero cells and an extended one executes only the new cells.
+    ``manifest_path`` additionally writes the resumable campaign
+    manifest there (requires ``cache_dir``).  Rows are identical to the
+    direct path either way.
     """
+    if cache_dir is not None:
+        from ..sweeps.service import CampaignSpec, run_campaign
+
+        campaign = CampaignSpec(
+            name="sweep",
+            n_scenarios=n_scenarios,
+            policies=tuple(policies),
+            scenario_duration_s=duration_s,
+            seed=seed,
+            replan=replan,
+            backend=backend,
+            generator=generator,
+            spec_kw=dict(spec_kw),
+        )
+        return run_campaign(
+            campaign, cache_dir=cache_dir, manifest_path=manifest_path,
+            jobs=jobs,
+        ).rows
+    if manifest_path is not None:
+        raise ValueError("manifest_path= requires cache_dir= (campaign mode)")
     gen = generator or default_generator()
     all_modes = sorted(gen.transitions)
     mode_defs = {m: get_mode(m) for m in all_modes}
@@ -623,48 +987,10 @@ def aggregate_sweep(
     an ``attribution`` entry: summed lateness decomposed into
     queueing / realloc-stall / re-stagger / duration-tail seconds, so a
     sweep can print *why* a policy misses, not just how often.
+
+    Thin batch wrapper over the streaming
+    :class:`repro.sweeps.SweepReducer` — the two are equal by
+    construction; use the reducer directly when rows arrive
+    incrementally (campaigns, shard workers).
     """
-    out: Dict[str, Dict[str, object]] = {}
-    by_pol: Dict[str, List[Mapping[str, object]]] = {}
-    for r in rows:
-        by_pol.setdefault(str(r["policy"]), []).append(r)
-    for pol, rs in sorted(by_pol.items()):
-        per_mode: Dict[str, Dict[str, List[float]]] = {}
-        for r in rs:
-            for m, st in r["per_mode"].items():  # type: ignore[union-attr]
-                bucket = per_mode.setdefault(
-                    m, {"violation_rate": [], "p99_s": [], "realloc_frac": []}
-                )
-                bucket["violation_rate"].append(st["violation_rate"])
-                if st["p99_s"] is not None:
-                    bucket["p99_s"].append(st["p99_s"])
-                bucket["realloc_frac"].append(st["realloc_frac"])
-        out[pol] = {
-            "n": len(rs),
-            "violation_rate": float(np.mean([r["violation_rate"] for r in rs])),
-            "task_miss_rate": float(np.mean([r["task_miss_rate"] for r in rs])),
-            "realloc_frac": float(np.mean([r["realloc_frac"] for r in rs])),
-            "tiles_used": int(max(int(r.get("tiles_used", 0)) for r in rs)),
-            "per_mode": {
-                m: {k: float(np.mean(v)) if v else float("nan")
-                    for k, v in b.items()}
-                for m, b in sorted(per_mode.items())
-            },
-        }
-        # online miss-attribution aggregation over recorded rows
-        att_rows = [a for r in rs if (a := r.get("attribution")) is not None]
-        if att_rows:
-            comp = {"queueing": 0.0, "realloc_stall": 0.0,
-                    "restagger": 0.0, "duration_tail": 0.0}
-            for a in att_rows:
-                for k in comp:
-                    comp[k] += float(a["components_s"][k])
-            out[pol]["attribution"] = {
-                "n_recorded": len(att_rows),
-                "n_late": sum(int(a["n_late"]) for a in att_rows),
-                "n_dropped": sum(int(a["n_dropped"]) for a in att_rows),
-                "n_degraded": sum(int(a["n_degraded"]) for a in att_rows),
-                "lateness_s": sum(float(a["lateness_s"]) for a in att_rows),
-                "components_s": comp,
-            }
-    return out
+    return SweepReducer().update_many(rows).result()
