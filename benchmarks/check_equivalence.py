@@ -206,11 +206,19 @@ def main(argv=None) -> int:
             "|---|---|---|---|---|",
         ]
         fails = 0
+        total = 0
         for scen in scenarios:
+            if get_scenario(scen).has_degradations:
+                # the SoA kernels do not model degradation seams
+                # (``soa_usable`` rejects these scripts); the bitwise
+                # mode still covers them through the scalar lane
+                lines.append(f"| {scen} | — | skipped (degradations) | — | — |")
+                continue
             for pol in args.policies:
                 v = run_cell_distributional(scen, pol, args.seeds, args.ks_tol)
                 ok = v["struct_ok"] and v["ks_ok"] and v["ci_ok"]
                 fails += 0 if ok else 1
+                total += 1
                 lines.append(
                     f"| {scen} | {pol} "
                     f"| {'OK' if v['struct_ok'] else '**FAIL**'} "
@@ -218,7 +226,6 @@ def main(argv=None) -> int:
                     f"{'OK' if v['ks_ok'] else '**FAIL**'} "
                     f"| {'OK' if v['ci_ok'] else '**FAIL**'} |"
                 )
-        total = len(scenarios) * len(args.policies)
         lines.append("")
         lines.append(
             f"**{total - fails}/{total}** SoA-vs-scalar cells "

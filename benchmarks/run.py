@@ -28,8 +28,8 @@ from pathlib import Path
 from repro.obs import metrics
 
 from . import fig6_casestudy, fig11_ablation, fig12_e2e, fig13_scaling
-from . import figS_budget, figS_predict, figS_rates, figS_scenarios, headroom
-from . import perf_bench, roofline, table2_overhead
+from . import figS_budget, figS_degrade, figS_predict, figS_rates
+from . import figS_scenarios, headroom, perf_bench, roofline, table2_overhead
 
 SUITES = {
     "fig6": fig6_casestudy.run,
@@ -40,6 +40,7 @@ SUITES = {
     "figS_rates": figS_rates.run,
     "figS_predict": figS_predict.run,
     "figS_budget": figS_budget.run,
+    "figS_degrade": figS_degrade.run,
     "perf": perf_bench.run,
     "table2": table2_overhead.run,
     "headroom": headroom.run,
@@ -49,7 +50,7 @@ SUITES = {
 #: CLI conveniences: the scenario suites also answer to their module names
 ALIASES = {"figS_scenarios": "figS", "rates": "figS_rates",
            "predict": "figS_predict", "budget": "figS_budget",
-           "perf_bench": "perf"}
+           "degrade": "figS_degrade", "perf_bench": "perf"}
 
 
 def _rows_from_csv(text: str) -> list:

@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Check relative links in the project's markdown docs.
+
+Walks ``README.md`` plus ``docs/*.md`` and verifies that every
+relative markdown link — ``[text](path)`` and ``[text](path#anchor)``
+— resolves to an existing file or directory, and that in-page /
+cross-page ``#anchor`` fragments match a heading in the target file
+(GitHub-style slugs).  External links (``http(s)://``, ``mailto:``)
+are ignored: this is a repo-consistency check, not a crawler.
+
+Dependency-free by design so it can run in the CI lint job (and
+pre-commit) without installing anything:
+
+    python scripts/check_docs_links.py
+
+Exit status 0 when every link resolves, 1 otherwise (each broken link
+is reported as ``file:line: message``).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: files scanned: the project front door plus the docs tree
+DOC_GLOBS = ("README.md", "docs/*.md")
+
+#: inline markdown links; [text](target) with no nested parens in target
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#!")
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    text = heading.strip().lower()
+    # drop inline markup that does not survive into the anchor
+    text = re.sub(r"[`*_]", "", text)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # link -> text
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set[str]:
+    """All heading anchors defined in a markdown file."""
+    anchors: set[str] = set()
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = re.match(r"\s{0,3}(#{1,6})\s+(.*)", line)
+        if m:
+            slug = _slugify(m.group(2))
+            # GitHub de-duplicates repeats as slug-1, slug-2, ...
+            candidate, n = slug, 1
+            while candidate in anchors:
+                candidate = f"{slug}-{n}"
+                n += 1
+            anchors.add(candidate)
+    return anchors
+
+
+def _iter_links(md_path: Path):
+    """Yield ``(lineno, target)`` for each link, skipping code fences."""
+    in_fence = False
+    for lineno, line in enumerate(
+        md_path.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        # inline code spans frequently hold (...) that isn't a link
+        line = re.sub(r"`[^`]*`", "", line)
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check() -> list[str]:
+    errors: list[str] = []
+    anchor_cache: dict[Path, set[str]] = {}
+
+    def anchors_of(path: Path) -> set[str]:
+        if path not in anchor_cache:
+            anchor_cache[path] = _anchors(path)
+        return anchor_cache[path]
+
+    files = sorted(
+        p for glob in DOC_GLOBS for p in REPO.glob(glob) if p.is_file()
+    )
+    if not files:
+        return [f"{REPO}: no markdown files matched {DOC_GLOBS}"]
+
+    for md in files:
+        rel_md = md.relative_to(REPO)
+        for lineno, target in _iter_links(md):
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            path_part, _, fragment = target.partition("#")
+            if path_part:
+                dest = (md.parent / path_part).resolve()
+                try:
+                    dest.relative_to(REPO)
+                except ValueError:
+                    errors.append(
+                        f"{rel_md}:{lineno}: link escapes the repo: {target}"
+                    )
+                    continue
+                if not dest.exists():
+                    errors.append(
+                        f"{rel_md}:{lineno}: broken link target: {target}"
+                    )
+                    continue
+            else:
+                dest = md  # pure in-page anchor
+            if fragment and dest.suffix == ".md" and dest.is_file():
+                if fragment.lower() not in anchors_of(dest):
+                    errors.append(
+                        f"{rel_md}:{lineno}: missing anchor "
+                        f"#{fragment} in {dest.relative_to(REPO)}"
+                    )
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    for err in errors:
+        print(err, file=sys.stderr)
+    n_files = len([p for g in DOC_GLOBS for p in REPO.glob(g)])
+    if errors:
+        print(f"# {len(errors)} broken link(s) across {n_files} files",
+              file=sys.stderr)
+        return 1
+    print(f"# docs link check: {n_files} files OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -153,6 +153,30 @@ class ModeFrontier:
             return min(within, key=lambda p: (p.tiles, -p.q, p.miss))
         return min(feas, key=lambda p: (p.miss, p.tiles))
 
+    def select_within_tiles(
+        self,
+        max_tiles: int,
+        target_miss: Optional[float] = None,
+    ) -> Optional[FrontierPoint]:
+        """Degraded-budget selection: the best operating point whose
+        reservation fits ``max_tiles`` — what an online replanner swaps
+        to when tiles die (``docs/degradation.md``).  Any partition
+        count qualifies (the engine morphs partitions online), feasible
+        points meeting ``target_miss`` win on fewest tiles, then
+        feasible points on lowest predicted miss, then infeasible ones
+        as a last resort.  ``None`` when nothing fits the budget."""
+        pts = [p for p in self.points if p.tiles <= max_tiles]
+        if not pts:
+            return None
+        feas = [p for p in pts if p.feasible]
+        if not feas:
+            return min(pts, key=lambda p: (p.miss, p.tiles, -p.q))
+        if target_miss is not None:
+            within = [p for p in feas if p.miss <= target_miss]
+            if within:
+                return min(within, key=lambda p: (p.tiles, -p.q, p.miss))
+        return min(feas, key=lambda p: (p.miss, p.tiles, -p.q))
+
     def blend_source(
         self, num_partitions: int, selected: FrontierPoint
     ) -> Optional[FrontierPoint]:

@@ -97,6 +97,7 @@ class SchedulePortfolio:
         partition_span: int = 1,
         budget_fracs: tuple = (0.85, 0.7),
         dop_prune: Optional[float] = None,
+        harmonize_partitions: bool = True,
     ) -> "SchedulePortfolio":
         """Per-mode tile-budget autotuning (see :mod:`~.autotune`).
 
@@ -122,11 +123,16 @@ class SchedulePortfolio:
         partition_span``) × tile budgets (``budget_fracs`` of each
         feasible compile's own peak), and every mode installs the
         *cheapest* frontier point whose predicted E2E miss probability
-        meets the target.  Because the engine hot-swaps only between
-        equal partition counts, the spatial axis is harmonized across
-        modes first: the common partition count minimizing the
-        portfolio's total reserved tiles (subject to every mode meeting
-        the target) wins.
+        meets the target.
+
+        ``harmonize_partitions`` (the legacy default) restricts the
+        spatial axis to one common partition count across modes — the
+        one minimizing the portfolio's total reserved tiles subject to
+        every mode meeting the target.  This predates the engine's
+        online partition morphing, which lets a hot-swap split/merge
+        partitions at the seam; pass ``False`` to let every mode keep
+        its *own* best partition count (morph stalls are charged
+        through the same bounded-realloc path as any other swap).
         """
         with metrics.phase("portfolio_compile"):
             compiler = compiler or GHACompiler()
@@ -158,10 +164,11 @@ class SchedulePortfolio:
                 )
                 mode_wfs[name] = m_wf
 
-            # joint spatial harmonization: hot-swaps require every mode of
-            # a portfolio to share one partition count
+            # joint spatial harmonization (legacy): pin every mode to
+            # one partition count.  With morphing (harmonize off) each
+            # mode selects freely and the engine splits/merges online.
             p_star: Optional[int] = None
-            if explore:
+            if explore and harmonize_partitions:
                 common = set.intersection(
                     *(set(f.partition_counts()) for f in frontiers.values())
                 )
@@ -299,6 +306,16 @@ class OnlineReplanner:
     detection_delay_s: float = 0.0
     n_swaps: int = 0
     total_stall_s: float = 0.0
+    #: degraded-operation response (docs/degradation.md): on a tile
+    #: fault the replanner drops to the cheapest frontier point that
+    #: fits the surviving tiles (the L2P re-placement then maps the new
+    #: table around the dead tiles); on recovery it restores the mode's
+    #: own table.  Off, the policy rides the fault out on its shrunken
+    #: partition.
+    respond_to_faults: bool = True
+    n_degrade_swaps: int = 0
+    _fault_depth: int = dataclasses.field(default=0, repr=False)
+    _fault_swapped: bool = dataclasses.field(default=False, repr=False)
 
     def _swap_to(
         self,
@@ -340,6 +357,52 @@ class OnlineReplanner:
 
     def on_mode_change(self, sim: "Simulator", mode: str, now: float) -> None:
         self._reactive_swap(sim, mode, now)
+
+    def on_degrade(self, sim: "Simulator", event: object, begin: bool) -> None:
+        """Tile-fault response: re-plan against the reduced tile budget.
+
+        On fault onset the engine has already shrunk (and possibly
+        evacuated) the struck partition; this hook then swaps to the
+        mode frontier's best operating point that *fits the surviving
+        tiles* (:meth:`~.autotune.ModeFrontier.select_within_tiles`) —
+        installing it lets the L2P indirection re-place the table
+        around the dead tiles, so the new table runs at full nominal
+        capacity.  If the installed table already fits, it is
+        re-installed (a copy, forcing the re-placement swap).  When the
+        last fault lifts, the mode's own table is restored.  Other
+        degradation kinds need no spatial response: throttles and
+        bandwidth loss are temporal, dropout storms act through the
+        trace.
+        """
+        if not self.respond_to_faults or getattr(event, "kind", "") != "tile_fault":
+            return
+        mode = sim._mode_now
+        if begin:
+            self._fault_depth += 1
+            avail = sim.hw.num_tiles - sim.fault_tiles_lost
+            frontier = self.portfolio.frontiers.get(mode) if mode else None
+            table = None
+            if frontier is not None:
+                point = frontier.select_within_tiles(avail)
+                table = None if point is None else point.schedule
+            if table is None:
+                table = self.portfolio.get(mode)
+                if table is not None and table.peak_tiles > avail:
+                    table = None  # nothing fits: ride the fault out
+            if table is None:
+                return
+            if table is sim.schedule:
+                # same table, new placement: force the swap so the L2P
+                # remap (and its honest stall) actually happens
+                table = dataclasses.replace(table)
+            self._swap_to(sim, table)
+            self.n_degrade_swaps += 1
+            self._fault_swapped = True
+        else:
+            self._fault_depth = max(0, self._fault_depth - 1)
+            if self._fault_depth == 0 and self._fault_swapped:
+                self._fault_swapped = False
+                self._swap_to(sim, self.portfolio.get(mode))
 
     def on_forecast(self, sim: "Simulator", payload: object, now: float) -> None:
         """Deferred detection: the confirmation window armed at the
@@ -559,8 +622,11 @@ class PredictiveReplanner(OnlineReplanner):
             sim.clear_drain_watch()
             return
         if now + 1e-12 < deadline_s:
+            n_new = len(table.partitions)
             over = any(
-                table.partitions[p.idx].capacity < p.allocated
+                # partitions the swap would morph away must drain too
+                (p.allocated > 0 if p.idx >= n_new
+                 else table.partitions[p.idx].capacity < p.allocated)
                 for p in sim.parts
             )
             if over:
@@ -583,7 +649,11 @@ class PredictiveReplanner(OnlineReplanner):
             return
         stats = self.forecast_stats
         window = max(0.0, f.switch_at_s - now)
-        if f.confidence >= self.confidence_hi:
+        morphing = len(new.partitions) != len(sim.schedule.partitions)
+        if f.confidence >= self.confidence_hi or morphing:
+            # a blend keeps the old partitions by construction, so a
+            # cross-partition-count transition (unharmonized portfolio)
+            # hedges by pre-staging instead
             # full pre-stage: background-copy the target table's
             # weight/feature deltas; the active table — and every
             # running/pending job — is untouched until the seam

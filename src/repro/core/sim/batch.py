@@ -72,6 +72,7 @@ from .trace import (
     _mix64,
     _mix64_int,
     _params_for,
+    storm_drops,
 )
 
 __all__ = [
@@ -102,6 +103,9 @@ class BatchTrace:
     work: np.ndarray        # (B, n) FLOPs per job (0 for sensors)
     io: np.ndarray          # (B, n) seconds per job
     sensor_lat: np.ndarray  # (B, n) seconds per job (0 for DNN jobs)
+    #: per-lane sensor-dropout-storm verdicts (see Trace.storm_drop);
+    #: None when the scenario has no storms
+    storm_drop: Optional[Tuple[Optional[np.ndarray], ...]] = None
 
     @property
     def batch(self) -> int:
@@ -114,6 +118,9 @@ class BatchTrace:
             work=self.work[k],
             io=self.io[k],
             sensor_lat=self.sensor_lat[k],
+            storm_drop=(
+                None if self.storm_drop is None else self.storm_drop[k]
+            ),
         )
 
 
@@ -268,6 +275,10 @@ def sample_trace_batch(
         seeds = tuple(int(s) for s in seeds)
         B, n = len(seeds), skel.n
         par = _params_for(skel, model, scenario)
+        # storm verdicts are host-side per-lane draws (the scalar
+        # helper, so each lane is bit-identical to sample_trace)
+        drops = tuple(storm_drops(skel, scenario, s) for s in seeds)
+        storm = None if all(d is None for d in drops) else drops
         if device and _HAS_JAX:
             work, io, sensor_lat = _sample_trace_batch_jnp(skel, par, seeds)
             return BatchTrace(
@@ -276,6 +287,7 @@ def sample_trace_batch(
                 work=work,
                 io=io,
                 sensor_lat=sensor_lat,
+                storm_drop=storm,
             )
         work = np.zeros((B, n), dtype=np.float64)
         io = np.zeros((B, n), dtype=np.float64)
@@ -310,6 +322,7 @@ def sample_trace_batch(
             work=work,
             io=io,
             sensor_lat=sensor_lat,
+            storm_drop=storm,
         )
 
 
@@ -349,6 +362,12 @@ def fast_lane_supported(sim: Simulator) -> bool:
     from ..runtime.scheduler import AdsTilePolicy
 
     if sim.cfg.recorder is not None:
+        return False
+    # injected platform degradations route through engine seams
+    # (capacity loss, bandwidth scaling, degrade accounting) that the
+    # fused loop does not inline — scalar-lane fallback, bit-identical
+    # by construction
+    if getattr(sim.cfg.scenario, "has_degradations", False):
         return False
     pol = sim.policy
     rep = pol.replanner
@@ -1358,7 +1377,7 @@ def report_digest(report: SimReport) -> dict:
         return x
 
     fc = report.forecast
-    return {
+    out = {
         "duration_s": report.duration_s,
         "total_tiles": report.total_tiles,
         "effective_frac": report.effective_frac,
@@ -1392,6 +1411,15 @@ def report_digest(report: SimReport) -> dict:
         "tiles_used": report.tiles_used,
         "tiles_reserved_mean": report.tiles_reserved_mean,
     }
+    # degraded-operation section only when present, so digests (and the
+    # pinned hashes derived from them) of degradation-free runs are
+    # unchanged from before the degradation seams existed
+    if report.degrade:
+        out["degrade"] = tuple(
+            tuple(_f(v) for v in dataclasses.astuple(st))
+            for st in report.degrade
+        )
+    return out
 
 
 def reports_identical(a: SimReport, b: SimReport) -> bool:

@@ -44,8 +44,8 @@ from .policy import Policy
 from .trace import Trace, build_skeleton, sample_trace
 
 __all__ = [
-    "ForecastStats", "Job", "JobState", "ModeStats", "SimConfig",
-    "Simulator", "SimReport",
+    "DegradeStats", "ForecastStats", "Job", "JobState", "ModeStats",
+    "SimConfig", "Simulator", "SimReport",
 ]
 
 
@@ -281,6 +281,28 @@ class ForecastStats:
 
 
 @dataclasses.dataclass
+class DegradeStats:
+    """Per-degradation-event accounting (docs/degradation.md).
+
+    A window opens when its event begins and closes at *recovery*: the
+    first on-time chain completion at/after the platform effect lifts
+    (``t_end``).  ``misses_during`` counts every chain violation —
+    late, degraded or dropped sinks — between onset and recovery, so a
+    fault whose damage outlives the fault itself is charged honestly.
+    ``recover_s`` is NaN when the run never recovers inside the
+    horizon (permanent faults recover only if the runtime re-plans
+    around them).
+    """
+
+    kind: str
+    t_start: float
+    t_end: float                   # when the platform effect lifts
+    misses_during: int = 0
+    completions_during: int = 0
+    recover_s: float = math.nan    # first on-time completion - t_end
+
+
+@dataclasses.dataclass
 class SimReport:
     duration_s: float
     total_tiles: int
@@ -328,6 +350,11 @@ class SimReport:
     #: (:func:`~repro.obs.attribution.attribution_report`); filled by
     #: the scenario runner for recorded runs, ``None`` otherwise
     attribution: Optional[Dict[str, object]] = None
+    #: degraded-operation runs only: one :class:`DegradeStats` per
+    #: injected event, in onset order.  Empty for degradation-free
+    #: scenarios (and excluded from the report digest, so pre-existing
+    #: pinned digests are unaffected).
+    degrade: List[DegradeStats] = dataclasses.field(default_factory=list)
 
     @property
     def violation_rate(self) -> float:
@@ -419,6 +446,33 @@ class Simulator:
         # (chain, mode) -> [completions, violations]
         self._sink_by_mode: Dict[Tuple[str, str], List[int]] = {}
         self.n_mode_switches = 0
+        # degraded-operation state: injected platform events (duck-typed
+        # from scenario.degradations), their per-event accounting, and
+        # windows still awaiting recovery.  All empty for
+        # degradation-free scenarios — every hook below is a cheap
+        # truthiness check, so such runs stay bit-identical.
+        scen0 = self.cfg.scenario
+        self._degrades: tuple = tuple(
+            getattr(scen0, "degradations", ()) or ()
+        )
+        self._degrade_stats: List[DegradeStats] = []
+        self._deg_open: List[DegradeStats] = []
+        self._bw_scale: float = 1.0
+        #: all in-effect tile faults: event index -> dead tiles.  The
+        #: L2P indirection can *re-place* a freshly installed table
+        #: around dead tiles (a hot-swap whose table reserves no more
+        #: than the surviving tiles absorbs the loss), so a fault is
+        #: split into "active" (tiles physically dead) and "applied"
+        #: (the loss currently lands on a partition's capacity).
+        self._fault_active: Dict[int, int] = {}
+        #: tiles currently lost to *applied* faults, per partition index
+        self._fault_by_part: Dict[int, int] = {}
+        #: per applied event: (partition index, k) so the end event
+        #: restores exactly what it took
+        self._fault_applied: Dict[int, Tuple[int, int]] = {}
+        #: partitions retired by an online morph; kept for tile-second
+        #: accounting (the report sums over live + retired)
+        self._retired_parts: List[_Partition] = []
         self._build_jobs()
         self.chain_latencies: Dict[str, List[float]] = {
             c.name: [] for c in wf.chains
@@ -477,6 +531,11 @@ class Simulator:
         work_l = trace.work.tolist()
         io_l = trace.io.tolist()
         slat_l = trace.sensor_lat.tolist()
+        # dropout-storm verdicts (STREAM_DEGRADE draws) fold into the
+        # same drop-at-release seam as scenario dropout windows
+        drops = skel.drop_at_release
+        if getattr(trace, "storm_drop", None) is not None:
+            drops = [a or bool(b) for a, b in zip(drops, trace.storm_drop)]
         append = self.jobs.append
         # positional Job construction in dataclass field order (jid,
         # task, cycle, idx, release, is_sensor, work_flops, io_s,
@@ -493,7 +552,7 @@ class Simulator:
                 append(Job(
                     i, t, cyc, ix, rel_t, True, 0.0, lat, 0.0, -1,
                     rel_t, rel_t + lat * 2, rel_t + ddl, 0, dep, suc,
-                    drop_at_release=skel.drop_at_release[i],
+                    drop_at_release=drops[i],
                 ))
             else:
                 part, ert_s, sub_s, dop, sync = plan
@@ -636,7 +695,7 @@ class Simulator:
             old = part.running[jid]
             moved += per_tile * (old if d == 0 else abs(d - old))
             job.n_resizes += 1
-        stall = self.hw.realloc_latency(moved, part.capacity)
+        stall = self._realloc_stall(moved, part.capacity)
         if self.cfg.chunk_boundary_realloc:
             # §IV-D2: chunks are unpreemptable — migration waits for the
             # in-flight chunks of the *resized* jobs to drain (checkpoint
@@ -691,6 +750,20 @@ class Simulator:
         for jid, d in starts.items():
             self.start_job(self.jobs[jid], d)
         return stall
+
+    def _realloc_stall(self, moved: float, tiles: int) -> float:
+        """Stop-migrate-restart stall for ``moved`` checkpoint bytes in
+        a ``tiles``-tile partition, with any active ``bandwidth_loss``
+        degradation stretching the migration (bytes / bandwidth) term.
+        The fixed decision/hop overheads are NoC-control traffic and do
+        not scale.  ``_bw_scale`` is exactly 1.0 outside degradation
+        windows, so degradation-free runs take the untouched
+        single-call path and stay bit-identical."""
+        if self._bw_scale >= 1.0:
+            return self.hw.realloc_latency(moved, tiles)
+        base = self.hw.realloc_latency(0.0, tiles)
+        full = self.hw.realloc_latency(moved, tiles)
+        return base + (full - base) / max(self._bw_scale, 1e-9)
 
     def _begin_stall(self, part: _Partition, moved: float, stall: float) -> None:
         """Charge one stop-migrate-restart stall on ``part`` — shared by
@@ -759,7 +832,9 @@ class Simulator:
 
         Returns the number of bytes staged.
         """
-        budget = max(0.0, window_s) * self.hw.realloc.migration_bw
+        budget = (
+            max(0.0, window_s) * self.hw.realloc.migration_bw * self._bw_scale
+        )
         spent: Dict[int, float] = {}
         total = 0.0
         for task, plan, volume in list(self._plan_deltas(new)):
@@ -837,12 +912,43 @@ class Simulator:
         (re-)anchor: the seam itself for a reactive swap (default:
         now), the *forecast* seam for a predictive pre-swap.
 
+        When ``new`` carries a *different partition count* the swap
+        first **morphs** the partition set online (split/merge):
+        surviving partitions keep their tiles and running jobs; removed
+        partitions are retired — their running jobs are preempted and
+        their live checkpoints carried to the partitions their tasks
+        re-plan into (charged as migration volume there); newly created
+        partitions start empty.  Retired partitions keep their
+        tile-second accounting in the final report.  This removes the
+        old same-partition-count restriction, so per-mode tables no
+        longer need a harmonized spatial layout
+        (``SchedulePortfolio.compile(harmonize_partitions=False)``).
+
         Returns the summed stall time across partitions.
         """
+        carry: Dict[int, float] = {}
         if len(new.partitions) != len(self.parts):
-            raise ValueError(
-                "hot-swap requires a schedule with the same partition count"
-            )
+            carry = self._morph_partitions(new)
+        # L2P re-placement around dead tiles: a freshly installed table
+        # whose reservation fits the *surviving* tiles maps its logical
+        # tiles onto healthy physical ones, absorbing active faults
+        # (the fault's end event then finds nothing left to restore).
+        # A table that needs more keeps the per-partition loss.
+        dead = sum(self._fault_active.values())
+        if self._fault_applied and new.peak_tiles <= self.hw.num_tiles - dead:
+            self._fault_applied.clear()
+            self._fault_by_part.clear()
+        elif self._fault_applied:
+            # re-attribute losses whose partition was morphed away
+            n_now = len(self.parts)
+            for fdi, (pi, k) in list(self._fault_applied.items()):
+                if pi >= n_now:
+                    self._fault_by_part[pi] = self._fault_by_part.get(pi, k) - k
+                    if self._fault_by_part.get(pi, 0) <= 0:
+                        self._fault_by_part.pop(pi, None)
+                    pj = pi % n_now
+                    self._fault_applied[fdi] = (pj, k)
+                    self._fault_by_part[pj] = self._fault_by_part.get(pj, 0) + k
         self._tiles_used = max(self._tiles_used, new.peak_tiles)
         self._reserved_ts += self.schedule.peak_tiles * max(
             0.0, self.now - self._reserved_t0
@@ -856,14 +962,24 @@ class Simulator:
             staged[plan.partition] = staged.get(plan.partition, 0.0) + volume
         # background-copy budget per partition: stage-in volume that the
         # pre-stage window can overlap with execution (never live state)
-        bg_budget = max(0.0, prestage_window_s) * self.hw.realloc.migration_bw
+        bg_budget = (
+            max(0.0, prestage_window_s)
+            * self.hw.realloc.migration_bw
+            * self._bw_scale
+        )
         total_stall = 0.0
         for part in self.parts:
             new_cap = new.partitions[part.idx].capacity
+            lost = self._fault_by_part.get(part.idx, 0)
+            if lost:
+                # active tile faults survive the swap: the new table's
+                # nominal capacity is reduced by whatever is still dead
+                new_cap = max(1, new_cap - lost)
             self._touch(part)
             stage_in = staged.get(part.idx, 0.0)
             overlapped = min(stage_in, bg_budget)
             moved = stage_in - overlapped   # residual: stalls the partition
+            moved += carry.get(part.idx, 0.0)  # live state from retired parts
             if part.allocated > new_cap:
                 victims = sorted(part.running, key=lambda j: (part.running[j], j))
                 while part.allocated > new_cap and victims:
@@ -888,7 +1004,7 @@ class Simulator:
                     job.state = JobState.READY
                     self._ready_sets[part.idx][job] = None
             part.capacity = new_cap
-            stall = self.hw.realloc_latency(moved, max(new_cap, 1))
+            stall = self._realloc_stall(moved, max(new_cap, 1))
             # freeze whatever keeps running for the swap stall (§IV-D1)
             for jid in part.running:
                 frozen = self.jobs[jid]
@@ -955,6 +1071,219 @@ class Simulator:
                 },
             )
         return total_stall
+
+    def _morph_partitions(self, new: Schedule) -> Dict[int, float]:
+        """Online split/merge of the partition set to match ``new``.
+
+        Shrinking retires the trailing partitions: every job running
+        there is preempted (progress preserved) and parked READY in the
+        partition its task re-plans into under ``new``; its live
+        checkpoint bytes are *carried* — returned per target partition
+        so :meth:`hotswap_schedule` charges them into that partition's
+        swap stall (live state can never be background-staged).
+        Growing appends empty partitions; capacities for every
+        surviving partition are set by the caller's per-partition loop.
+        Retired partitions stop accounting at the morph instant and are
+        kept on ``_retired_parts`` so the report's tile-second and
+        reallocation sums stay complete.
+        """
+        old_n, new_n = len(self.parts), len(new.partitions)
+        rec = self._rec
+        carry: Dict[int, float] = {}
+        parked: List[Tuple[Job, float]] = []
+        if new_n < old_n:
+            for part in self.parts[new_n:]:
+                self._touch(part)
+                for jid in sorted(part.running):
+                    job = self.jobs[jid]
+                    held = part.running[jid]
+                    self._advance_job(job)
+                    if rec is not None:
+                        rec.emit(
+                            self.now, "job_preempt", jid=jid, task=job.task,
+                            partition=part.idx, value=held,
+                            info="morph_retire",
+                        )
+                    part.alloc -= part.running.pop(jid)
+                    job.rate = 0.0
+                    job.gen += 1
+                    job.dop = 0
+                    job.n_resizes += 1
+                    job.state = JobState.READY
+                    parked.append(
+                        (job, self.wf.tasks[job.task].checkpoint_bytes * held)
+                    )
+                part.stalled = False  # pending "resume" events are moot
+                self._retired_parts.append(part)
+            for rs in self._ready_sets[new_n:]:
+                parked.extend((j, 0.0) for j in rs)
+            del self.parts[new_n:]
+            del self._ready_sets[new_n:]
+        else:
+            for i in range(old_n, new_n):
+                self.parts.append(_Partition(
+                    idx=i,
+                    capacity=new.partitions[i].capacity,
+                    last_t=self.now,
+                ))
+                self._ready_sets.append({})
+        # re-home displaced READY jobs onto their new-plan partitions
+        # (the caller's retarget pass then fixes ERT/sub-deadline/DoP)
+        for job, moved in parked:
+            plan = new.plans.get(job.task)
+            tgt = plan.partition if plan is not None else 0
+            job.partition = tgt
+            self._ready_sets[tgt][job] = None
+            if moved:
+                carry[tgt] = carry.get(tgt, 0.0) + moved
+        if rec is not None:
+            rec.emit(
+                self.now, "morph", value=float(new_n),
+                data={
+                    "old_partitions": old_n,
+                    "new_partitions": new_n,
+                    "displaced": len(parked),
+                },
+            )
+        return carry
+
+    # ------------------------------------------------------------------
+    # degraded operation (docs/degradation.md)
+    # ------------------------------------------------------------------
+    @property
+    def fault_tiles_lost(self) -> int:
+        """Tiles currently dead across all active tile faults (what a
+        replanner must budget around: the surviving chip is
+        ``hw.num_tiles - fault_tiles_lost``)."""
+        return sum(self._fault_active.values())
+
+    def _on_degrade(self, di: int, begin: bool) -> None:
+        """Apply/lift one injected platform event (``degrade`` events
+        seeded by :meth:`_prime` from ``scenario.degradations``)."""
+        d = self._degrades[di]
+        kind = getattr(d, "kind", type(d).__name__)
+        scen = self.cfg.scenario
+        rec = self._rec
+        if begin:
+            st = DegradeStats(
+                kind=kind, t_start=self.now, t_end=d.end_s(self._end_t),
+            )
+            self._degrade_stats.append(st)
+            self._deg_open.append(st)
+            if kind == "tile_fault":
+                self._apply_tile_fault(di, d)
+            elif kind == "bandwidth_loss":
+                self._bw_scale = scen.bandwidth_scale(self.now)
+        else:
+            if kind == "tile_fault":
+                self._end_tile_fault(di)
+            elif kind == "bandwidth_loss":
+                # windows are half-open: at the end instant the lifted
+                # event no longer contributes
+                self._bw_scale = scen.bandwidth_scale(self.now)
+        if rec is not None:
+            rec.emit(
+                self.now, "degrade_begin" if begin else "degrade_end",
+                info=kind, value=float(di),
+            )
+        self.policy.on_degrade(self, d, begin)
+
+    def _apply_tile_fault(self, di: int, d) -> None:
+        """Tiles die: shrink the partition's capacity and, if the
+        survivors no longer fit, evacuate running jobs (largest
+        allocation first) through a stop-migrate-restart stall — their
+        checkpoints must come off the dead tiles."""
+        pi = d.partition % len(self.parts)
+        part = self.parts[pi]
+        self._touch(part)
+        self._fault_active[di] = d.k_tiles
+        self._fault_by_part[pi] = self._fault_by_part.get(pi, 0) + d.k_tiles
+        self._fault_applied[di] = (pi, d.k_tiles)
+        new_cap = max(
+            1,
+            self.schedule.partitions[pi].capacity
+            - self._fault_by_part[pi],
+        ) if pi < len(self.schedule.partitions) else max(
+            1, part.capacity - d.k_tiles
+        )
+        moved = 0.0
+        evacuated = False
+        if part.allocated > new_cap:
+            victims = sorted(part.running, key=lambda j: (part.running[j], j))
+            while part.allocated > new_cap and victims:
+                jid = victims.pop()  # largest allocation first
+                job = self.jobs[jid]
+                moved += (
+                    self.wf.tasks[job.task].checkpoint_bytes
+                    * part.running[jid]
+                )
+                self._advance_job(job)
+                if self._rec is not None:
+                    self._rec.emit(
+                        self.now, "job_preempt", jid=jid, task=job.task,
+                        partition=pi, value=part.running[jid],
+                        info="tile_fault",
+                    )
+                part.alloc -= part.running.pop(jid)
+                job.rate = 0.0
+                job.gen += 1
+                job.dop = 0
+                job.n_resizes += 1
+                job.state = JobState.READY
+                self._ready_sets[pi][job] = None
+                evacuated = True
+        part.capacity = new_cap
+        if evacuated:
+            stall = self._realloc_stall(moved, max(new_cap, 1))
+            for jid in part.running:
+                frozen = self.jobs[jid]
+                self._advance_job(frozen)
+                frozen.rate = 0.0
+                frozen.gen += 1
+            self._begin_stall(part, moved, stall)
+            self._notify_drain()
+
+    def _end_tile_fault(self, di: int) -> None:
+        """Dead tiles come back: restore capacity and give the policy a
+        scheduling point to use them."""
+        self._fault_active.pop(di, None)
+        applied = self._fault_applied.pop(di, None)
+        if applied is None:
+            return  # absorbed by an L2P re-placement meanwhile
+        pi, k = applied
+        left = self._fault_by_part.get(pi, 0) - k
+        if left > 0:
+            self._fault_by_part[pi] = left
+        else:
+            self._fault_by_part.pop(pi, None)
+        if pi >= len(self.parts):
+            return  # the partition was morphed away meanwhile
+        part = self.parts[pi]
+        self._touch(part)
+        part.capacity = max(
+            1,
+            self.schedule.partitions[pi].capacity - max(left, 0),
+        ) if pi < len(self.schedule.partitions) else part.capacity + k
+        self.policy.on_point(self, pi, self.now, "resume", None)
+
+    def _deg_note(self, violated: bool) -> None:
+        """Fold one chain-sink outcome into every open degradation
+        window: violations count as misses-during; the first on-time
+        completion at/after a window's effect lifts closes it and
+        stamps its time-to-recover."""
+        now = self.now
+        closed = False
+        for st in self._deg_open:
+            st.completions_during += 1
+            if violated:
+                st.misses_during += 1
+            elif now >= st.t_end - 1e-12:
+                st.recover_s = max(0.0, now - st.t_end)
+                closed = True
+        if closed:
+            self._deg_open = [
+                st for st in self._deg_open if math.isnan(st.recover_s)
+            ]
 
     def preempt(self, job: Job) -> None:
         """Remove a running job from its tiles back to the ready queue
@@ -1116,6 +1445,8 @@ class Simulator:
                 self.chain_latencies[chain.name].append(lat)
             if violated:
                 self.chain_violations[chain.name] += 1
+            if self._deg_open:
+                self._deg_note(violated)
             if self.cfg.scenario is not None:
                 # attribute to the mode active at the source sample time
                 m = self.cfg.scenario.mode_at(t0)
@@ -1134,6 +1465,8 @@ class Simulator:
                 )
             self.chain_count[chain.name] += 1
             self.chain_violations[chain.name] += 1
+            if self._deg_open:
+                self._deg_note(True)
             if self.cfg.scenario is not None:
                 t0 = self._sink_src.get((chain.name, job.jid), job.release)
                 m = self.cfg.scenario.mode_at(t0)
@@ -1189,6 +1522,21 @@ class Simulator:
         for job in self.jobs:
             if job.is_sensor:
                 self._push(job.release, "sensor", (job.jid,))
+
+        # seed degradation events (docs/degradation.md): begin at the
+        # event's onset, end when its platform effect lifts.  Permanent
+        # events (end at the horizon) never fire an end event — the
+        # heap stops at the horizon anyway.  Dropout storms act purely
+        # through the trace (STREAM_DEGRADE drop verdicts) but still
+        # open an accounting window here.
+        for di, d in enumerate(self._degrades):
+            t0 = getattr(d, "start_s", 0.0)
+            if t0 >= self._end_t:
+                continue
+            self._push(t0, "degrade", (di, True))
+            t1 = d.end_s(self._end_t)
+            if t1 < self._end_t:
+                self._push(t1, "degrade", (di, False))
 
         # seed mode-switch events from the scenario timeline (adjacent
         # equal-mode segments are one context: no event, no switch)
@@ -1272,6 +1620,8 @@ class Simulator:
                 self._push(self.now + dt, "chunk", (job.jid, job.gen))
             self.policy.on_point(self, job.partition, self.now, "chunk", job)
         elif kind == "resume":
+            if payload[0] >= len(self.parts):
+                return  # partition retired by an online morph
             part = self.parts[payload[0]]
             if part.stall_end > self.now + 1e-12:
                 return  # superseded by a longer stall (hot-swap)
@@ -1287,6 +1637,8 @@ class Simulator:
             self.policy.on_point(self, part.idx, self.now, "resume", None)
         elif kind == "timer":
             pid, jid = payload
+            if pid >= len(self.parts):
+                return  # partition retired by an online morph
             job = self.jobs[jid] if jid >= 0 else None
             if job is not None and job.state in (JobState.DONE, JobState.DROPPED):
                 return
@@ -1305,6 +1657,8 @@ class Simulator:
             if rec is not None:
                 rec.emit(self.now, "mode_change", info=mode)
             self.policy.on_mode_change(self, mode, self.now)
+        elif kind == "degrade":
+            self._on_degrade(payload[0], payload[1])
 
     def _finalize(self) -> SimReport:
         # drain accounting to end time
@@ -1341,8 +1695,10 @@ class Simulator:
 
     def _report(self) -> SimReport:
         total = self.hw.num_tiles * self.cfg.duration_s
-        busy = sum(p.busy_ts for p in self.parts)
-        realloc = sum(p.realloc_ts for p in self.parts)
+        # retired (morphed-away) partitions keep their accounting
+        all_parts = self.parts + self._retired_parts
+        busy = sum(p.busy_ts for p in all_parts)
+        realloc = sum(p.realloc_ts for p in all_parts)
         dnn_jobs = [
             j for j in self.jobs
             if not j.is_sensor and j.release <= self.cfg.duration_s
@@ -1394,7 +1750,7 @@ class Simulator:
         p99 = {}
         for ch, lats in self.chain_latencies.items():
             p99[ch] = float(np.percentile(lats, 99)) if lats else float("nan")
-        ratios = [r for p in self.parts for r in p.decision_ratios]
+        ratios = [r for p in all_parts for r in p.decision_ratios]
 
         # per-mode report slices
         mode_stats: Dict[str, ModeStats] = {}
@@ -1451,8 +1807,8 @@ class Simulator:
             realloc_frac=realloc / total,
             idle_frac=max(0.0, 1.0 - (busy + realloc) / total),
             dropped_work_frac=self.dropped_work_ts / total,
-            n_realloc=sum(p.n_realloc for p in self.parts),
-            realloc_bytes=sum(p.realloc_bytes for p in self.parts),
+            n_realloc=sum(p.n_realloc for p in all_parts),
+            realloc_bytes=sum(p.realloc_bytes for p in all_parts),
             n_jobs=len(considered),
             n_dropped=len(dropped),
             task_miss_rate=n_miss / max(len(considered), 1),
@@ -1471,4 +1827,5 @@ class Simulator:
                 * max(0.0, self.cfg.duration_s - self._reserved_t0)
             ) / self.cfg.duration_s,
             frontier_meta=self._frontier_meta,
+            degrade=self._degrade_stats,
         )

@@ -51,6 +51,23 @@ class Policy:
         if rep is not None and hasattr(rep, "on_forecast"):
             rep.on_forecast(sim, payload, now)
 
+    def on_degrade(
+        self, sim: "Simulator", event: object, begin: bool
+    ) -> None:
+        """Called when an injected platform degradation begins
+        (``begin=True``) or its effect lifts (``begin=False``); the
+        engine applies the physical effect (capacity loss, bandwidth
+        scaling, dropped frames) *before* this hook.  ``event`` is the
+        scenario's degradation object (duck-typed; see
+        ``repro.scenarios.script.DEGRADATION_TYPES``).  The default
+        delegates to the attached :attr:`replanner` when it knows how
+        to respond (re-selecting a frontier point against the reduced
+        tile budget, then restoring on recovery) — pinned policies ride
+        out the event on their offline schedule."""
+        rep = self.replanner
+        if rep is not None and hasattr(rep, "on_degrade"):
+            rep.on_degrade(sim, event, begin)
+
     def on_point(
         self,
         sim: "Simulator",

@@ -62,18 +62,26 @@ __all__ = [
     "STREAM_WORK",
     "STREAM_IO",
     "STREAM_SENSOR",
+    "STREAM_DEGRADE",
     "counter_uniforms",
     "chain_sources",
     "TraceSkeleton",
     "Trace",
     "build_skeleton",
     "sample_trace",
+    "storm_drops",
     "clear_skeleton_cache",
 ]
 
 STREAM_WORK = 0
 STREAM_IO = 1
 STREAM_SENSOR = 2
+#: platform-degradation draws (sensor-dropout storms).  A dedicated
+#: stream keeps degraded scenarios on the counter contract *without*
+#: perturbing any draw of a degradation-free scenario: the work/io/
+#: sensor streams are keyed identically whether or not this one is
+#: ever sampled, so existing seeds stay bit-reproducible.
+STREAM_DEGRADE = 3
 
 _MASK64 = 0xFFFFFFFFFFFFFFFF
 _GOLDEN = np.uint64(0x9E3779B97F4A7C15)
@@ -471,6 +479,27 @@ def _build_skeleton(
                 if m.any():
                     burst[ix[m]] *= b.work_scale
 
+    # thermal throttling stretches DNN durations by a deterministic
+    # release-time factor, exactly like a burst work multiplier (the
+    # draw itself stays on the work stream; docs/degradation.md)
+    throttles = getattr(scenario, "throttles", None)
+    for th in (throttles() if callable(throttles) else ()):
+        for t, ix in by_task_arr.items():
+            if is_sensor[ix[0]]:
+                continue
+            r = release[ix]
+            t0, t1 = th.start_s, th.start_s + th.duration_s
+            m = (r >= t0) & (r < t1)
+            if not m.any():
+                continue
+            if th.ramp_s > 0.0:
+                rise = np.minimum(1.0, (r[m] - t0) / th.ramp_s)
+                fall = np.minimum(1.0, (t1 - r[m]) / th.ramp_s)
+                f = 1.0 + (th.scale - 1.0) * np.minimum(rise, fall)
+            else:
+                f = th.scale
+            burst[ix[m]] *= f
+
     # sensor dropout windows
     drop = [False] * n
     if scenario is not None and getattr(scenario, "dropouts", ()):
@@ -540,6 +569,10 @@ class Trace:
     work: np.ndarray        # FLOPs per job (0 for sensors)
     io: np.ndarray          # seconds per job (0 for sensors)
     sensor_lat: np.ndarray  # seconds per job (0 for DNN jobs)
+    #: per-job sensor-dropout-storm losses (bool per job, sensors only;
+    #: drawn on STREAM_DEGRADE).  None for scenarios without storms —
+    #: the common case pays nothing.
+    storm_drop: Optional[np.ndarray] = None
 
     @property
     def n(self) -> int:
@@ -666,4 +699,44 @@ def _sample_trace(
     return Trace(
         skeleton_key=skel.key, seed=seed,
         work=work, io=io, sensor_lat=sensor_lat,
+        storm_drop=storm_drops(skel, scenario, seed),
     )
+
+
+def storm_drops(
+    skel: TraceSkeleton, scenario, seed: int
+) -> Optional[np.ndarray]:
+    """Per-job sensor-dropout-storm verdicts for one seed.
+
+    One uniform per sensor release inside any storm window, drawn on
+    ``STREAM_DEGRADE`` — scenarios without storms draw nothing (and
+    return ``None``), so their work/io/sensor streams are untouched and
+    existing seeds stay bit-reproducible.  Overlapping storms compose
+    as independent loss processes (complement product), evaluated at
+    the frame's release time.
+    """
+    storms = getattr(scenario, "storms", None)
+    storms = storms() if callable(storms) else ()
+    s = skel.sen_ix
+    if not storms or not s.size:
+        return None
+    rel = skel.release[s]
+    base = [skel.tasks[int(j)].split("#")[0] for j in s]
+    keep = np.ones(s.size, dtype=np.float64)
+    for st in storms:
+        m = (rel >= st.start_s) & (rel < st.start_s + st.duration_s)
+        if st.sensors:
+            m &= np.asarray([b in st.sensors for b in base], dtype=bool)
+        keep[m] *= 1.0 - st.drop_frac
+    frac = 1.0 - keep
+    cand = frac > 0.0
+    if not cand.any():
+        return None
+    ix = s[cand]
+    u = _uniforms_from_keys(
+        seed, STREAM_DEGRADE, skel.task_keys[ix], skel.regime_arr[ix],
+        skel.cycle_arr[ix], skel.idx_arr[ix],
+    )
+    out = np.zeros(skel.n, dtype=bool)
+    out[ix] = u < frac[cand]
+    return out

@@ -54,6 +54,10 @@ EVENT_KINDS = frozenset({
     "realloc",          # DoP reallocation applied; value = bytes moved
     "hotswap",          # schedule table installed; value = summed stall (s)
     "prestage",         # background staging window; value = bytes staged
+    # degraded operation (docs/degradation.md)
+    "degrade_begin",    # injected platform event applies; info = kind
+    "degrade_end",      # its effect lifts; info = kind
+    "morph",            # online partition split/merge; value = new count
     # control plane
     "mode_change",      # driving-context switch; info = new mode
     "rate_seam",        # sensor-rate regime boundary; value = hyper-period

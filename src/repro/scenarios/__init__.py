@@ -22,11 +22,16 @@ per-mode GHA schedules through the bounded-reallocation path.
 from .modes import MODES, DrivingMode, get_mode, mode_names, register_mode
 from .script import (
     BUNDLED_SCENARIOS,
+    DEGRADATION_TYPES,
+    BandwidthLoss,
     Burst,
     MarkovScenarioGenerator,
     ModeSegment,
     ScenarioScript,
     SensorDropout,
+    SensorDropoutStorm,
+    ThermalThrottle,
+    TileFault,
     default_generator,
     get_scenario,
 )
@@ -43,10 +48,6 @@ from .runner import (
     compile_portfolio,
     parallel_map,
     run,
-    run_scenario,
-    run_scenario_batch,
-    run_scenario_group,
-    run_scenario_soa,
     soa_usable,
     summarize,
     sweep,
@@ -59,11 +60,16 @@ __all__ = [
     "mode_names",
     "register_mode",
     "BUNDLED_SCENARIOS",
+    "DEGRADATION_TYPES",
+    "BandwidthLoss",
     "Burst",
     "MarkovScenarioGenerator",
     "ModeSegment",
     "ScenarioScript",
     "SensorDropout",
+    "SensorDropoutStorm",
+    "ThermalThrottle",
+    "TileFault",
     "default_generator",
     "get_scenario",
     "SWEEP_BACKENDS",
@@ -78,10 +84,6 @@ __all__ = [
     "compile_portfolio",
     "parallel_map",
     "run",
-    "run_scenario",
-    "run_scenario_batch",
-    "run_scenario_group",
-    "run_scenario_soa",
     "soa_usable",
     "summarize",
     "sweep",

@@ -3,11 +3,11 @@
 :func:`run` is the single entry point for scenario simulation.  It owns
 backend selection (the scalar reference engine, the bit-identical
 batched lockstep engine, the distributional SoA jax backend) and the
-per-spec fallback policy, replacing the four historical entry points —
-``run_scenario`` / ``run_scenario_batch`` / ``run_scenario_soa`` /
-``run_scenario_group`` — which remain importable as thin deprecated
-shims for one more release (each delegates to :func:`run` and emits a
-``DeprecationWarning``).
+per-spec fallback policy.  It replaced the four historical entry
+points — ``run_scenario`` / ``run_scenario_batch`` /
+``run_scenario_soa`` / ``run_scenario_group`` — whose deprecated shims
+have completed their one-release grace period and are gone; see
+docs/scenarios.md for the call-site translations.
 
 ``sweep`` is the fleet-scale view: ``N`` Markov-sampled scenarios x
 policies, fanned out over a process pool with deterministic
@@ -54,10 +54,6 @@ __all__ = [
     "build_trace",
     "run",
     "soa_usable",
-    "run_scenario",
-    "run_scenario_batch",
-    "run_scenario_group",
-    "run_scenario_soa",
     "parallel_map",
     "ItemFailure",
     "summarize",
@@ -122,6 +118,11 @@ class ScenarioSpec(ExperimentSpec):
     #: ``run``'s ``recorders=`` argument for trace export.
     #: Off by default — recording a sweep costs memory per run.
     record: bool = False
+    #: autotuned portfolios only (``target_miss`` set): pin every mode
+    #: to one common partition count (the legacy pre-morphing
+    #: behaviour).  False lets each mode keep its own best spatial
+    #: layout — hot-swaps then split/merge partitions online.
+    harmonize_partitions: bool = True
 
     def __post_init__(self) -> None:
         if self.scenario is None:
@@ -155,6 +156,12 @@ def soa_usable(spec: "ScenarioSpec") -> Tuple[bool, str]:
             False,
             f"spec (policy={spec.policy!r}, replan_mode={spec.replan_mode!r}, "
             f"record={spec.record}) is outside the SoA support set",
+        )
+    if getattr(spec.scenario, "has_degradations", False):
+        return (
+            False,
+            "scenario injects platform degradations (engine seams the "
+            "SoA kernels do not model)",
         )
     return True, ""
 
@@ -286,6 +293,7 @@ def compile_portfolio(
     wf, _hw, model, compiler = build_stack(spec)
     wanted = tuple(modes) if modes is not None else spec.scenario.modes()
     autotune_kw.setdefault("target_miss", spec.target_miss)
+    autotune_kw.setdefault("harmonize_partitions", spec.harmonize_partitions)
     return SchedulePortfolio.compile(
         model, wf, {m: get_mode(m) for m in wanted}, compiler, **autotune_kw,
     )
@@ -330,6 +338,7 @@ def _prepare_run(spec: ScenarioSpec):
         portfolio = SchedulePortfolio.compile(
             model, wf, {m: get_mode(m) for m in wanted}, compiler,
             target_miss=spec.target_miss,
+            harmonize_partitions=spec.harmonize_partitions,
         )
     return wf, model, portfolio.schedules[initial_mode], portfolio
 
@@ -752,61 +761,6 @@ def _auto_groups(spec_list: Sequence[ScenarioSpec]) -> List[List[int]]:
         )
         groups.setdefault(key, []).append(i)
     return list(groups.values())
-
-
-# ---------------------------------------------------------------------------
-# deprecated entry-point shims (one release; then removed)
-# ---------------------------------------------------------------------------
-def _warn_deprecated(old: str, repl: str) -> None:
-    warnings.warn(
-        f"repro.scenarios.runner.{old} is deprecated and will be removed "
-        f"in the next release; call repro.scenarios.run({repl}) instead",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def run_scenario(
-    spec: ScenarioSpec,
-    trace: Optional[Trace] = None,
-    recorder: Optional[TraceRecorder] = None,
-) -> SimReport:
-    """Deprecated: use ``run(spec)[0]`` (scalar single-run shape)."""
-    _warn_deprecated("run_scenario", "spec, trace=..., recorders={0: ...}")
-    recs = None if recorder is None else {0: recorder}
-    return run(spec, trace=trace, recorders=recs, backend="scalar")[0]
-
-
-def run_scenario_batch(
-    spec: ScenarioSpec,
-    seeds: Sequence[int],
-    recorders: Optional[Mapping[int, TraceRecorder]] = None,
-) -> List[SimReport]:
-    """Deprecated: use ``run(spec, seeds=..., backend="lockstep")``."""
-    _warn_deprecated("run_scenario_batch", 'spec, seeds=..., backend="lockstep"')
-    return run(spec, seeds=seeds, backend="lockstep", recorders=recorders)
-
-
-def run_scenario_soa(
-    spec: ScenarioSpec,
-    seeds: Sequence[int],
-    options=None,
-) -> List[SimReport]:
-    """Deprecated: use ``run(spec, seeds=..., backend="soa",
-    fallback=False)`` (the shim keeps the historical raise-don't-fall-
-    back contract)."""
-    _warn_deprecated(
-        "run_scenario_soa", 'spec, seeds=..., backend="soa", fallback=False'
-    )
-    return run(spec, seeds=seeds, backend="soa", options=options, fallback=False)
-
-
-def run_scenario_group(
-    specs: Sequence[ScenarioSpec], trace: Optional[Trace] = None,
-) -> List[SimReport]:
-    """Deprecated: use ``run(specs, trace=..., backend="lockstep")``."""
-    _warn_deprecated("run_scenario_group", 'specs, trace=..., backend="lockstep"')
-    return run(list(specs), trace=trace, backend="lockstep")
 
 
 # ---------------------------------------------------------------------------

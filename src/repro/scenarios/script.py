@@ -33,6 +33,11 @@ __all__ = [
     "ModeSegment",
     "Burst",
     "SensorDropout",
+    "TileFault",
+    "ThermalThrottle",
+    "SensorDropoutStorm",
+    "BandwidthLoss",
+    "DEGRADATION_TYPES",
     "ScenarioScript",
     "MarkovScenarioGenerator",
     "default_generator",
@@ -81,6 +86,150 @@ class SensorDropout:
         )
 
 
+# ---------------------------------------------------------------------------
+# platform-degradation events (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+# Unlike bursts/dropouts (which perturb the *workload*), these degrade
+# the *platform* under it.  All four are pure frozen data with a common
+# shape — ``kind`` tag, ``start_s``, and an ``end_s(horizon)`` giving
+# the instant the platform effect lifts — so the engine can thread them
+# through one event seam and account time-to-recover per event
+# (docs/degradation.md).
+
+
+@dataclasses.dataclass(frozen=True)
+class TileFault:
+    """A partition loses ``k_tiles`` tiles at ``start_s``.
+
+    ``duration_s=None`` models a hard fault (the tiles never come
+    back); a float models a recoverable fault (e.g. a tile island
+    power-cycled back online).
+    """
+
+    start_s: float
+    partition: int
+    k_tiles: int
+    duration_s: Optional[float] = None
+
+    kind = "tile_fault"
+
+    def __post_init__(self) -> None:
+        if self.start_s < 0 or self.k_tiles <= 0 or self.partition < 0:
+            raise ValueError(f"bad tile fault {self!r}")
+        if self.duration_s is not None and self.duration_s <= 0:
+            raise ValueError(f"bad tile fault duration {self.duration_s}")
+
+    def end_s(self, horizon: float) -> float:
+        if self.duration_s is None:
+            return horizon
+        return min(self.start_s + self.duration_s, horizon)
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalThrottle:
+    """Thermal throttling: task durations stretch by up to ``scale``.
+
+    The stretch ramps linearly over ``ramp_s`` on the way in and out
+    (silicon heats and cools; a step is the ``ramp_s=0`` special case).
+    The factor is a deterministic function of release time, applied in
+    the trace skeleton exactly like a :class:`Burst` work multiplier —
+    so throttled draws stay on the counter-based stream contract.
+    """
+
+    start_s: float
+    duration_s: float
+    scale: float = 1.3
+    ramp_s: float = 0.0
+
+    kind = "thermal_throttle"
+
+    def __post_init__(self) -> None:
+        if self.start_s < 0 or self.duration_s <= 0 or self.scale < 1.0:
+            raise ValueError(f"bad thermal throttle {self!r}")
+        if self.ramp_s < 0 or self.ramp_s > self.duration_s / 2:
+            raise ValueError(
+                f"throttle ramp {self.ramp_s} must fit twice in "
+                f"duration {self.duration_s}"
+            )
+
+    def end_s(self, horizon: float) -> float:
+        return min(self.start_s + self.duration_s, horizon)
+
+    def factor(self, t: float) -> float:
+        """Duration multiplier at time ``t`` (trapezoidal profile)."""
+        t0, t1 = self.start_s, self.start_s + self.duration_s
+        if not (t0 <= t < t1):
+            return 1.0
+        if self.ramp_s > 0.0:
+            rise = min(1.0, (t - t0) / self.ramp_s)
+            fall = min(1.0, (t1 - t) / self.ramp_s)
+            return 1.0 + (self.scale - 1.0) * min(rise, fall)
+        return self.scale
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorDropoutStorm:
+    """Random per-frame sensor losses over a window.
+
+    Each release of a matching sensor inside the window is dropped with
+    probability ``drop_frac`` — drawn on the dedicated degradation
+    stream of the counter contract, so the storm changes no other draw
+    of the run.  Contrast :class:`SensorDropout`, which silences one
+    sensor completely.
+    """
+
+    start_s: float
+    duration_s: float
+    drop_frac: float = 0.3
+    sensors: Tuple[str, ...] = ()   # empty = every sensor
+
+    kind = "sensor_dropout_storm"
+
+    def __post_init__(self) -> None:
+        if self.start_s < 0 or self.duration_s <= 0:
+            raise ValueError(f"bad dropout storm {self!r}")
+        if not (0.0 <= self.drop_frac <= 1.0):
+            raise ValueError(f"storm drop_frac {self.drop_frac} not in [0,1]")
+
+    def end_s(self, horizon: float) -> float:
+        return min(self.start_s + self.duration_s, horizon)
+
+    def active(self, sensor: str, t: float) -> bool:
+        if not (self.start_s <= t < self.start_s + self.duration_s):
+            return False
+        return not self.sensors or sensor.split("#")[0] in self.sensors
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthLoss:
+    """Transient loss of a fraction of the migration bandwidth.
+
+    During the window every stop-migrate-restart stall's byte-transfer
+    term is charged against ``(1 - frac)`` of the nominal NoC/DRAM
+    bandwidth (the fixed decision/hop terms are unaffected).
+    """
+
+    start_s: float
+    duration_s: float
+    frac: float = 0.5
+
+    kind = "bandwidth_loss"
+
+    def __post_init__(self) -> None:
+        if self.start_s < 0 or self.duration_s <= 0:
+            raise ValueError(f"bad bandwidth loss {self!r}")
+        if not (0.0 <= self.frac < 1.0):
+            raise ValueError(f"bandwidth loss frac {self.frac} not in [0,1)")
+
+    def end_s(self, horizon: float) -> float:
+        return min(self.start_s + self.duration_s, horizon)
+
+
+#: the degradation event union (kept in one place for isinstance checks)
+DEGRADATION_TYPES = (TileFault, ThermalThrottle, SensorDropoutStorm,
+                     BandwidthLoss)
+
+
 @dataclasses.dataclass(frozen=True)
 class ScenarioScript:
     """An ordered timeline of mode segments with optional transients."""
@@ -89,12 +238,21 @@ class ScenarioScript:
     segments: Tuple[ModeSegment, ...]
     bursts: Tuple[Burst, ...] = ()
     dropouts: Tuple[SensorDropout, ...] = ()
+    #: platform-degradation events (tile faults, thermal throttling,
+    #: dropout storms, bandwidth loss) — see docs/degradation.md
+    degradations: Tuple[object, ...] = ()
 
     def __post_init__(self) -> None:
         if not self.segments:
             raise ValueError("scenario needs at least one mode segment")
         for seg in self.segments:
             get_mode(seg.mode)  # fail fast on unknown modes
+        for d in self.degradations:
+            if not isinstance(d, DEGRADATION_TYPES):
+                raise ValueError(
+                    f"unknown degradation event {d!r} (want one of "
+                    f"{[t.__name__ for t in DEGRADATION_TYPES]})"
+                )
 
     # -- timeline queries -------------------------------------------------
     @property
@@ -185,6 +343,51 @@ class ScenarioScript:
 
     def dropped(self, sensor: str, t: float) -> bool:
         return any(d.active(sensor, t) for d in self.dropouts)
+
+    # -- degradation queries ----------------------------------------------
+    @property
+    def has_degradations(self) -> bool:
+        return bool(self.degradations)
+
+    def throttle_factor(self, t: float) -> float:
+        """Deterministic duration multiplier from active throttles."""
+        f = 1.0
+        for d in self.degradations:
+            if isinstance(d, ThermalThrottle):
+                f *= d.factor(t)
+        return f
+
+    def storm_drop_frac(self, sensor: str, t: float) -> float:
+        """Per-frame drop probability at ``(sensor, t)`` — overlapping
+        storms compose as independent loss processes."""
+        keep = 1.0
+        for d in self.degradations:
+            if isinstance(d, SensorDropoutStorm) and d.active(sensor, t):
+                keep *= 1.0 - d.drop_frac
+        return 1.0 - keep
+
+    def bandwidth_scale(self, t: float) -> float:
+        """Fraction of nominal migration bandwidth available at ``t``."""
+        avail = 1.0
+        for d in self.degradations:
+            if isinstance(d, BandwidthLoss):
+                if d.start_s <= t < d.start_s + d.duration_s:
+                    avail *= 1.0 - d.frac
+        return avail
+
+    def throttles(self) -> Tuple[ThermalThrottle, ...]:
+        """The thermal-throttle events (trace skeleton consumer — the
+        core layer duck-types the script, so this accessor keeps it
+        from importing the event classes)."""
+        return tuple(
+            d for d in self.degradations if isinstance(d, ThermalThrottle)
+        )
+
+    def storms(self) -> Tuple[SensorDropoutStorm, ...]:
+        """The sensor-dropout-storm events (trace sampler consumer)."""
+        return tuple(
+            d for d in self.degradations if isinstance(d, SensorDropoutStorm)
+        )
 
     def rate_regimes(
         self, wf: Workflow, end_s: float
@@ -428,6 +631,28 @@ BUNDLED_SCENARIOS: Dict[str, ScenarioScript] = {
             ModeSegment("night", 0.6),
             ModeSegment("urban", 0.6),
             ModeSegment("rush_hour", 0.8),
+        ),
+    ),
+    # the platform degrades mid-drive (ROADMAP item 4): a camera glare
+    # storm on the on-ramp, then a tile island faults out of the
+    # perception partition right as rush-hour load arrives — with the
+    # migration bandwidth halved while the island power-cycles — and
+    # the silicon throttles thermally on the way out.  figS_degrade
+    # compares how the policies ride through it on paired traces.
+    "degraded_commute": ScenarioScript(
+        name="degraded_commute",
+        segments=(
+            ModeSegment("urban", 0.6),
+            ModeSegment("rush_hour", 0.8),
+            ModeSegment("urban", 0.6),
+        ),
+        degradations=(
+            SensorDropoutStorm(start_s=0.3, duration_s=0.2,
+                               drop_frac=0.3, sensors=("cam_multi",)),
+            TileFault(start_s=0.7, partition=1, k_tiles=8, duration_s=0.5),
+            BandwidthLoss(start_s=0.7, duration_s=0.5, frac=0.5),
+            ThermalThrottle(start_s=1.3, duration_s=0.4,
+                            scale=1.25, ramp_s=0.1),
         ),
     ),
 }

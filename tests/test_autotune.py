@@ -20,7 +20,7 @@ from repro.core.runtime.autotune import clear_frontier_cache
 from repro.core.sim import SimConfig, Simulator
 from repro.obs import metrics
 from repro.scenarios import ScenarioSpec, get_mode, get_scenario
-from repro.scenarios.runner import build_trace, compile_portfolio, run_scenario
+from repro.scenarios.runner import build_trace, compile_portfolio, run
 
 Q_LADDER = (0.9, 0.8, 0.7, 0.6, 0.5)
 
@@ -177,11 +177,13 @@ def test_paired_trace_frontier_compile_uses_no_more_tiles():
         assert point.tiles <= ladder_pf.selected[name].tiles, name
         assert point.miss <= target + 1e-12, name
     trace = build_trace(spec)
-    r_ladder = run_scenario(
-        dataclasses.replace(spec, portfolio=ladder_pf), trace=trace
+    [r_ladder] = run(
+        dataclasses.replace(spec, portfolio=ladder_pf), trace=trace,
+        backend="scalar",
     )
-    r_frontier = run_scenario(
-        dataclasses.replace(spec, portfolio=frontier_pf), trace=trace
+    [r_frontier] = run(
+        dataclasses.replace(spec, portfolio=frontier_pf), trace=trace,
+        backend="scalar",
     )
     assert r_frontier.tiles_used <= r_ladder.tiles_used
     assert 0 < r_frontier.tiles_reserved_mean <= r_frontier.tiles_used
@@ -225,8 +227,9 @@ def test_portfolio_harmonizes_partition_counts():
     )
     counts = {len(s.partitions) for s in pf.schedules.values()}
     assert len(counts) == 1
-    r = run_scenario(
-        ScenarioSpec(scenario=scen, policy="ads_tile", seed=2, portfolio=pf)
+    [r] = run(
+        ScenarioSpec(scenario=scen, policy="ads_tile", seed=2, portfolio=pf),
+        backend="scalar",
     )
     assert r.tiles_used == max(p.tiles for p in pf.selected.values())
     assert r.frontier_meta["tiles"] == pf.selected[scen.segments[0].mode].tiles
@@ -293,7 +296,7 @@ def test_target_miss_threads_through_scenario_spec():
     assert max(p.tiles for p in pf.selected.values()) < max(
         p.tiles for p in pf_cons.selected.values()
     )
-    r = run_scenario(spec)
+    [r] = run(spec, backend="scalar")
     assert r.tiles_used <= max(p.tiles for p in pf.selected.values())
     assert np.isfinite(r.tiles_reserved_mean)
 

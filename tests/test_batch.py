@@ -1,10 +1,10 @@
 """Batched lockstep engine vs the scalar reference engine.
 
-The contract under test is bit-identity: every lane of
-``run_scenario_batch`` / ``run_scenario_group`` must produce a
+The contract under test is bit-identity: every lane of a seed-fan or
+group ``run(..., backend="lockstep")`` must produce a
 :class:`~repro.core.sim.engine.SimReport` exactly equal (via
 ``report_digest``, every float verbatim) to the same run through the
-scalar ``run_scenario`` path.  The full bundled-scenario sweep runs in
+scalar backend.  The full bundled-scenario sweep runs in
 CI as its own gate (``benchmarks.check_equivalence``); here a fast
 subset pins the contract into tier-1, plus the de-batching edge cases
 (unsupported lane, attached recorder) and a property test over random
@@ -18,19 +18,14 @@ import pytest
 from repro.core.sim import batch as batch_mod
 from repro.core.sim.batch import reports_identical
 from repro.obs import TraceRecorder
-from repro.scenarios.runner import (
-    ScenarioSpec,
-    run_scenario,
-    run_scenario_batch,
-    run_scenario_group,
-)
+from repro.scenarios.runner import ScenarioSpec, run
 from repro.scenarios.script import default_generator, get_scenario
 
 SEEDS = [0, 7]
 
 
 def _scalar(spec: ScenarioSpec, seed: int):
-    return run_scenario(dataclasses.replace(spec, seed=int(seed)))
+    return run(dataclasses.replace(spec, seed=int(seed)), backend="scalar")[0]
 
 
 def _spy_scalar_lanes(monkeypatch):
@@ -50,7 +45,7 @@ def _spy_scalar_lanes(monkeypatch):
 @pytest.mark.parametrize("scenario", ["calm_to_rush", "rate_churn"])
 def test_batched_reports_bit_identical(scenario, policy):
     spec = ScenarioSpec(scenario=get_scenario(scenario), policy=policy)
-    reports = run_scenario_batch(spec, SEEDS)
+    reports = run(spec, seeds=SEEDS, backend="lockstep")
     for s, rb in zip(SEEDS, reports):
         assert reports_identical(_scalar(spec, s), rb), (scenario, policy, s)
 
@@ -67,12 +62,12 @@ def test_divergent_lane_falls_back_to_scalar(monkeypatch):
         ),
     ]
     seen = _spy_scalar_lanes(monkeypatch)
-    reports = run_scenario_group(specs)
+    reports = run(specs, backend="lockstep")
     assert len(seen) == 1
     assert seen[0].cfg.seed == 3
     assert not batch_mod.fast_lane_supported(seen[0])
     for spec, rb in zip(specs, reports):
-        assert reports_identical(run_scenario(spec), rb)
+        assert reports_identical(run(spec, backend="scalar")[0], rb)
 
 
 def test_recorder_lane_debatches(monkeypatch):
@@ -81,7 +76,8 @@ def test_recorder_lane_debatches(monkeypatch):
     # perturbing its own results or any other lane's
     spec = ScenarioSpec(scenario=get_scenario("calm_to_rush"), policy="ads_tile")
     seen = _spy_scalar_lanes(monkeypatch)
-    reports = run_scenario_batch(spec, SEEDS, recorders={1: TraceRecorder()})
+    reports = run(spec, seeds=SEEDS, backend="lockstep",
+                  recorders={1: TraceRecorder()})
     assert [sim.cfg.recorder is not None for sim in seen] == [True]
     assert reports[0].attribution is None
     assert reports[1].attribution is not None
@@ -93,7 +89,7 @@ def test_mixed_skeleton_batch_rejected():
     a = ScenarioSpec(scenario=get_scenario("calm_to_rush"), policy="cyc")
     b = ScenarioSpec(scenario=get_scenario("commute"), policy="cyc")
     with pytest.raises(ValueError, match="skeleton"):
-        run_scenario_group([a, b])
+        run([a, b], backend="lockstep")
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +142,6 @@ else:
         scen = default_generator().sample(duration, gen_seed)
         spec = ScenarioSpec(scenario=scen, policy=policy, cockpit_replicas=replicas)
         seeds = [run_seed, run_seed + 1]
-        reports = run_scenario_batch(spec, seeds)
+        reports = run(spec, seeds=seeds, backend="lockstep")
         for s, rb in zip(seeds, reports):
             assert reports_identical(_scalar(spec, s), rb), (gen_seed, policy, s)

@@ -44,7 +44,7 @@ from repro.scenarios.runner import (
     aggregate_sweep,
     build_trace,
     compile_portfolio,
-    run_scenario,
+    run,
     summarize,
     sweep,
 )
@@ -60,8 +60,8 @@ def _spec(name="rate_churn", policy="ads_tile", seed=1, **kw):
 
 def _recorded_sim(name="rate_churn", policy="ads_tile", seed=1):
     """A finished scenario Simulator with its recorder (mirrors
-    ``run_scenario``'s reactive-replan construction, which returns only
-    the report)."""
+    the runner's reactive-replan construction, which returns only the
+    report)."""
     spec = _spec(name, policy, seed)
     wf, _hw, model, _compiler = build_stack(spec)
     portfolio = compile_portfolio(spec)
@@ -90,9 +90,9 @@ def test_recorder_does_not_perturb_pinned_reports():
     spec = _spec("rate_churn")
     trace = build_trace(spec)
     spec = dataclasses.replace(spec, portfolio=compile_portfolio(spec))
-    off = run_scenario(spec, trace=trace)
+    [off] = run(spec, trace=trace, backend="scalar")
     rec = TraceRecorder()
-    on = run_scenario(spec, trace=trace, recorder=rec)
+    [on] = run(spec, trace=trace, recorders={0: rec}, backend="scalar")
     assert len(rec) > 0
     d_off = dataclasses.asdict(off)
     d_on = dataclasses.asdict(on)
@@ -105,8 +105,8 @@ def test_disabled_recorder_runs_are_deterministic():
     """Two fresh recorder-off runs of one pinned spec agree bitwise."""
     spec = _spec("commute", seed=3)
     spec = dataclasses.replace(spec, portfolio=compile_portfolio(spec))
-    a = dataclasses.asdict(run_scenario(spec))
-    b = dataclasses.asdict(run_scenario(spec))
+    a = dataclasses.asdict(run(spec, backend="scalar")[0])
+    b = dataclasses.asdict(run(spec, backend="scalar")[0])
     assert a == b
 
 
@@ -207,7 +207,7 @@ def test_attribute_misses_requires_a_recorder():
 # ---------------------------------------------------------------------------
 def test_recorded_rows_aggregate_attribution():
     spec = _spec("rate_churn", record=True)
-    report = run_scenario(spec)
+    [report] = run(spec, backend="scalar")
     assert report.attribution is not None
     row = summarize(spec, report)
     assert row["attribution"]["n_late"] == report.attribution["n_late"]

@@ -23,7 +23,7 @@ from repro.scenarios import (
     ScenarioSpec,
     get_mode,
     get_scenario,
-    run_scenario,
+    run,
 )
 from repro.scenarios.runner import build_trace, compile_portfolio
 
@@ -344,7 +344,7 @@ def test_reactive_detection_delay_defers_the_swap():
 # ---------------------------------------------------------------------------
 def test_predictive_run_reports_forecast_stats():
     scen = get_scenario("rate_churn")
-    r = run_scenario(ScenarioSpec(scenario=scen, policy="ads_tile", seed=3,
+    [r] = run(ScenarioSpec(scenario=scen, policy="ads_tile", seed=3,
                                   replan_mode="predictive"))
     assert r.forecast is not None
     assert r.forecast.n_hits == len(scen.segments) - 1
@@ -352,7 +352,8 @@ def test_predictive_run_reports_forecast_stats():
     assert r.forecast.prestage_bytes > 0
     assert r.n_mode_switches == len(scen.segments) - 1
     # reactive and pinned runs carry no forecast accounting
-    r2 = run_scenario(ScenarioSpec(scenario=scen, policy="ads_tile", seed=3))
+    [r2] = run(ScenarioSpec(scenario=scen, policy="ads_tile", seed=3),
+               backend="scalar")
     assert r2.forecast is None
 
 
@@ -360,7 +361,7 @@ def test_predictive_determinism():
     spec = ScenarioSpec(scenario=get_scenario("rate_churn"), policy="ads_tile",
                         seed=5, replan_mode="predictive",
                         detection_delay_s=0.08)
-    a, b = run_scenario(spec), run_scenario(spec)
+    [a], [b] = run(spec, backend="scalar"), run(spec, backend="scalar")
     assert a.violation_rate == b.violation_rate
     assert a.realloc_frac == b.realloc_frac
     assert dataclasses.asdict(a.forecast) == dataclasses.asdict(b.forecast)
@@ -380,7 +381,7 @@ def test_predictive_beats_reactive_on_rate_churn():
         trace = build_trace(spec)
         init = scen.segments[0].mode
         for mode in tot:
-            r = run_scenario(dataclasses.replace(spec, replan_mode=mode),
+            [r] = run(dataclasses.replace(spec, replan_mode=mode),
                              trace=trace)
             tot[mode][0] += sum(
                 s.n_violations for m, s in r.mode_stats.items() if m != init

@@ -21,7 +21,7 @@ from repro.scenarios import (
     get_mode,
     get_scenario,
     register_mode,
-    run_scenario,
+    run,
     sweep,
 )
 
@@ -234,8 +234,8 @@ def test_horizon_shorter_than_script_builds_no_future_regimes():
 def test_piecewise_reunroll_deterministic():
     spec = ScenarioSpec(scenario=get_scenario("rate_churn"),
                         policy="ads_tile", seed=7)
-    a = run_scenario(spec)
-    b = run_scenario(spec)
+    [a] = run(spec, backend="scalar")
+    [b] = run(spec, backend="scalar")
     assert a.effective_frac == b.effective_frac
     assert a.realloc_frac == b.realloc_frac
     assert a.chain_violations == b.chain_violations
@@ -249,8 +249,8 @@ def test_rate_churn_per_mode_accounting_and_replanning():
     completes chains, and per-mode counts reconcile with the global
     chain accounting."""
     scen = get_scenario("rate_churn")
-    r = run_scenario(ScenarioSpec(scenario=scen, policy="ads_tile",
-                                  replan=True, seed=3))
+    [r] = run(ScenarioSpec(scenario=scen, policy="ads_tile",
+                           replan=True, seed=3))
     assert r.n_mode_switches == len(scen.segments) - 1
     assert set(r.mode_stats) == set(scen.modes())
     assert np.isclose(sum(s.span_s for s in r.mode_stats.values()),
@@ -273,8 +273,8 @@ def test_rate_churn_ads_tile_bounds_realloc_waste():
     scen = get_scenario("rate_churn")
     waste = {}
     for policy in ("ads_tile", "tp_driven"):
-        r = run_scenario(ScenarioSpec(scenario=scen, policy=policy,
-                                      replan=True, seed=1))
+        [r] = run(ScenarioSpec(scenario=scen, policy=policy,
+                               replan=True, seed=1))
         waste[policy] = r.realloc_frac
     assert waste["ads_tile"] < waste["tp_driven"]
 

@@ -19,7 +19,7 @@ from repro.scenarios import (
     aggregate_sweep,
     default_generator,
     get_mode,
-    run_scenario,
+    run,
     sweep,
 )
 
@@ -112,7 +112,7 @@ def test_markov_generator_deterministic_and_covering():
 
 def test_equal_adjacent_segments_are_not_switches():
     script = ScenarioScript.parse("urban:0.2 urban:0.2 highway:0.2")
-    r = run_scenario(ScenarioSpec(scenario=script, policy="ads_tile",
+    [r] = run(ScenarioSpec(scenario=script, policy="ads_tile",
                                   replan=False, seed=1))
     assert r.n_mode_switches == 1   # urban->urban is not a context change
 
@@ -129,9 +129,9 @@ def scenario_reports():
     for policy, replan in (
         ("ads_tile", True), ("ads_tile", False), ("tp_driven", True),
     ):
-        out[(policy, replan)] = run_scenario(ScenarioSpec(
+        out[(policy, replan)] = run(ScenarioSpec(
             scenario=SCEN, policy=policy, replan=replan, seed=3,
-        ))
+        ))[0]
     return out
 
 
@@ -178,8 +178,8 @@ def test_mode_switch_determinism():
     """Same seed + same scenario script => identical SimReport."""
     script = ScenarioScript.parse("parking:0.3 urban:0.3 highway:0.3")
     spec = ScenarioSpec(scenario=script, policy="ads_tile", seed=11)
-    a = run_scenario(spec)
-    b = run_scenario(spec)
+    [a] = run(spec, backend="scalar")
+    [b] = run(spec, backend="scalar")
     assert a.task_miss_rate == b.task_miss_rate
     assert a.effective_frac == b.effective_frac
     assert a.realloc_frac == b.realloc_frac
@@ -202,9 +202,9 @@ def test_sensor_dropout_degrades_downstream():
         clean, name="dropped",
         dropouts=(SensorDropout("cam_multi", 0.1, 0.3),),
     )
-    r_clean = run_scenario(ScenarioSpec(scenario=clean, policy="ads_tile",
+    [r_clean] = run(ScenarioSpec(scenario=clean, policy="ads_tile",
                                         replan=False, seed=5))
-    r_drop = run_scenario(ScenarioSpec(scenario=dropped, policy="ads_tile",
+    [r_drop] = run(ScenarioSpec(scenario=dropped, policy="ads_tile",
                                        replan=False, seed=5))
     # dropped frames surface as chain violations, not silent success
     assert r_drop.violation_rate > r_clean.violation_rate

@@ -27,11 +27,7 @@ import pytest
 from repro.core.sim import soa
 from repro.core.sim import soa_kernels as K
 from repro.core.sim.batch import sample_trace_batch
-from repro.scenarios.runner import (
-    ScenarioSpec,
-    run_scenario,
-    run_scenario_soa,
-)
+from repro.scenarios.runner import ScenarioSpec, run
 from repro.scenarios.script import default_generator, get_scenario
 
 needs_jax = pytest.mark.skipif(
@@ -48,8 +44,9 @@ KS_TOL = 0.08
 
 def _cell(scenario: str, policy: str, seeds=SEEDS):
     spec = ScenarioSpec(scenario=get_scenario(scenario), policy=policy)
-    ref = [run_scenario(dataclasses.replace(spec, seed=int(s))) for s in seeds]
-    got = run_scenario_soa(spec, seeds)
+    ref = [r for s in seeds for r in
+           run(dataclasses.replace(spec, seed=int(s)), backend="scalar")]
+    got = run(spec, seeds=seeds, backend="soa", fallback=False)
     return ref, got
 
 
@@ -109,10 +106,10 @@ def test_kernel_cache_distinguishes_const_content():
     assert K._const_digest(pa.const) != K._const_digest(pb.const)
 
     K.clear_kernel_cache()
-    fresh = run_scenario_soa(spec_b, SEEDS)
+    fresh = run(spec_b, seeds=SEEDS, backend="soa", fallback=False)
     K.clear_kernel_cache()
-    run_scenario_soa(spec_a, SEEDS)        # warm the cache with A's consts
-    got = run_scenario_soa(spec_b, SEEDS)  # must not reuse A's loop
+    run(spec_a, seeds=SEEDS, backend="soa", fallback=False)  # warm the cache with A's consts
+    got = run(spec_b, seeds=SEEDS, backend="soa", fallback=False)  # must not reuse A's loop
     for f, g in zip(fresh, got):
         assert f.chain_latencies == g.chain_latencies
         assert f.violation_rate == g.violation_rate
@@ -156,8 +153,9 @@ def test_window_overflow_detected_and_retried():
 
     # the runner widens and converges to non-truncated reports
     with pytest.warns(RuntimeWarning, match="SoA job window"):
-        got = run_scenario_soa(spec, SEEDS, options=tight)
-    want = run_scenario_soa(spec, SEEDS)
+        got = run(spec, seeds=SEEDS, backend="soa", fallback=False,
+                  options=tight)
+    want = run(spec, seeds=SEEDS, backend="soa", fallback=False)
     assert len(got) == len(SEEDS)
     for a, b in zip(want, got):
         assert soa.structural_invariants(a) == soa.structural_invariants(b)
@@ -188,16 +186,16 @@ def test_run_problem_raises_without_jax(monkeypatch):
         soa.run_problem(None, None, [0])
     spec = ScenarioSpec(scenario=get_scenario("commute"), policy="cyc")
     with pytest.raises(soa.SoaUnsupported):
-        run_scenario_soa(spec, [0])
+        run(spec, seeds=[0], backend="soa", fallback=False)
 
 
 @needs_jax
-def test_run_scenario_soa_rejects_unsupported_spec():
+def test_soa_backend_rejects_unsupported_spec():
     spec = ScenarioSpec(
         scenario=get_scenario("commute"), policy="cyc", replan_mode="predictive"
     )
     with pytest.raises(soa.SoaUnsupported):
-        run_scenario_soa(spec, [0])
+        run(spec, seeds=[0], backend="soa", fallback=False)
 
 
 # ---------------------------------------------------------------------------
@@ -277,9 +275,10 @@ else:
         scen = default_generator().sample(duration, gen_seed)
         spec = ScenarioSpec(scenario=scen, policy=policy)
         seeds = [run_seed, run_seed + 1]
-        got = run_scenario_soa(spec, seeds)
+        got = run(spec, seeds=seeds, backend="soa", fallback=False)
         for s, rb in zip(seeds, got):
-            ra = run_scenario(dataclasses.replace(spec, seed=int(s)))
+            [ra] = run(dataclasses.replace(spec, seed=int(s)),
+                       backend="scalar")
             ia = soa.structural_invariants(ra)
             ib = soa.structural_invariants(rb)
             assert ia == ib, (gen_seed, policy, s)

@@ -27,9 +27,6 @@ from repro.scenarios.runner import (
     ScenarioSpec,
     parallel_map,
     run,
-    run_scenario,
-    run_scenario_batch,
-    run_scenario_group,
     summarize,
 )
 from repro.scenarios.script import default_generator, get_scenario
@@ -47,8 +44,6 @@ from repro.sweeps import (
 )
 from repro.sweeps.manifest import CampaignManifest, CellRecord
 from repro.sweeps.worker import run_shard
-
-pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 SPEC = ScenarioSpec(scenario=get_scenario("calm_to_rush"),
                     policy="ads_tile", seed=3)
@@ -130,7 +125,7 @@ def test_backend_registry_metadata():
 
 
 # ---------------------------------------------------------------------------
-# run() + deprecated shims
+# run() entry point
 # ---------------------------------------------------------------------------
 def test_run_validations():
     with pytest.raises(ValueError, match="seeds"):
@@ -141,23 +136,26 @@ def test_run_validations():
         run(SPEC, backend="warp")
 
 
-def test_shims_delegate_and_warn():
-    with pytest.warns(DeprecationWarning):
-        r_old = run_scenario(SPEC)
-    [r_new] = run(SPEC)
-    assert reports_identical(r_old, r_new)
+def test_removed_shims_stay_gone():
+    """The one-release deprecation window for the four historical entry
+    points is over; the names must not quietly come back."""
+    import repro.scenarios as scenarios
+    import repro.scenarios.runner as runner
 
-    seeds = [0, 7]
-    with pytest.warns(DeprecationWarning):
-        b_old = run_scenario_batch(SPEC, seeds)
-    b_new = run(SPEC, seeds=seeds)
-    assert all(reports_identical(a, b) for a, b in zip(b_old, b_new))
+    for name in ("run_scenario", "run_scenario_batch",
+                 "run_scenario_soa", "run_scenario_group"):
+        assert not hasattr(runner, name), name
+        assert not hasattr(scenarios, name), name
+        assert name not in runner.__all__
+        assert name not in scenarios.__all__
 
+    # the run() call shapes the shims delegated to remain bit-identical
+    [r_single] = run(SPEC)
+    fan = run(SPEC, seeds=[3])
     specs = [SPEC, dataclasses.replace(SPEC, policy="tp_driven")]
-    with pytest.warns(DeprecationWarning):
-        g_old = run_scenario_group(specs)
-    g_new = run(specs, backend="lockstep")
-    assert all(reports_identical(a, b) for a, b in zip(g_old, g_new))
+    group = run(specs, backend="lockstep")
+    assert reports_identical(r_single, fan[0])
+    assert reports_identical(r_single, group[0])
 
 
 # ---------------------------------------------------------------------------

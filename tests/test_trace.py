@@ -19,7 +19,7 @@ from repro.core.sim.trace import (
     sample_trace,
 )
 from repro.core.workload import unroll_hyperperiod
-from repro.scenarios import ScenarioSpec, get_scenario, run_scenario
+from repro.scenarios import ScenarioSpec, get_scenario, run
 
 
 def _stack(**kw):
@@ -149,12 +149,12 @@ def test_draws_stable_across_regime_splits():
 
 
 def test_shared_trace_reproduces_internal_sampling():
-    """run_scenario(trace=...) must equal the trace-less run exactly."""
+    """run(trace=...) must equal the trace-less run exactly."""
     scen = get_scenario("commute")
     spec = ScenarioSpec(scenario=scen, policy="ads_tile", seed=4)
     from repro.scenarios import build_trace
-    r_implicit = run_scenario(spec)
-    r_explicit = run_scenario(spec, trace=build_trace(spec))
+    [r_implicit] = run(spec, backend="scalar")
+    [r_explicit] = run(spec, trace=build_trace(spec), backend="scalar")
     assert r_implicit.effective_frac == r_explicit.effective_frac
     assert r_implicit.realloc_frac == r_explicit.realloc_frac
     assert r_implicit.chain_violations == r_explicit.chain_violations
